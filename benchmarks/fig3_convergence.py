@@ -1,0 +1,49 @@
+"""Paper Fig. 3: test accuracy over simulated time, 5 strategies x 3 datasets.
+
+Claim under test: FL with contextual client selection outperforms greedy /
+gossip / data-based / network-based on all three (synthetic-twin) datasets
+in the default non-iid setting (2 of 10 classes per client).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Uncached, acc_at_time, fl_run
+
+STRATEGIES = ("greedy", "gossip", "data", "network", "contextual")
+DATASETS = ("mnist", "cifar10", "svhn")
+# greedy trains the full connected cohort each round (~9x the per-round
+# compute of the 10%-selection strategies on this 1-core container): cap its
+# rounds and run it on mnist only — its straggler-bound time axis is evident
+# within a few rounds and identical in mechanism across datasets.
+ROUNDS = {"greedy": 6, "gossip": 40, "data": 40, "network": 40, "contextual": 40}
+GREEDY_DATASETS = ("mnist",)
+
+
+def main(samples=128, num_clients=100):
+    rows = []
+    for ds in DATASETS:
+        results = {}
+        for strat in STRATEGIES:
+            if strat == "greedy" and ds not in GREEDY_DATASETS:
+                continue
+            try:
+                r = fl_run(ds, strat, ROUNDS[strat], num_clients=num_clients,
+                           samples_per_client=samples)
+            except Uncached:
+                print(f"fig3,{ds},{strat},PENDING (not in cache; unset "
+                      f"REPRO_BENCH_CACHED_ONLY to compute)")
+                continue
+            results[strat] = r
+        if not results:
+            continue
+        horizon = min(max(x["sim_time"] for x in r["rounds"]) for r in results.values())
+        for strat, r in results.items():
+            final = acc_at_time(r["rounds"], horizon)
+            rows.append((f"fig3/{ds}/{strat}", horizon, final))
+            print(f"fig3,{ds},{strat},horizon_s={horizon:.0f},acc={final:.3f}")
+        best = max(results, key=lambda s: acc_at_time(results[s]["rounds"], horizon))
+        print(f"fig3,{ds},BEST,{best}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

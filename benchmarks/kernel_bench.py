@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU / compiled on TPU) vs
+the pure-jnp oracle.  Prints ``name,us_per_call,derived`` CSV rows.
+
+On this CPU container interpret-mode timings measure the Python tiling walk
+(not TPU perf) — the row to watch is the oracle column (jnp on CPU) and the
+allclose check; on a TPU backend the same harness times the compiled kernel.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ART  # noqa: F401  (sys.path side effect)
+from repro.kernels import fedavg_reduce, pairwise_cosine, ref, swa_decode
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    on_tpu = jax.default_backend() == "tpu"
+    interp = not on_tpu
+    k = jax.random.key(0)
+
+    x = jax.random.normal(k, (256, 4096))
+    us_ref = timeit(jax.jit(ref.pairwise_cosine), x)
+    us_pal = timeit(lambda a: pairwise_cosine(a, interpret=interp), x)
+    err = float(jnp.max(jnp.abs(pairwise_cosine(x, interpret=interp) - ref.pairwise_cosine(x))))
+    print(f"pairwise_cosine_oracle,{us_ref:.1f},N=256 D=4096")
+    print(f"pairwise_cosine_pallas,{us_pal:.1f},maxerr={err:.1e} mode={'tpu' if on_tpu else 'interpret'}")
+
+    u = jax.random.normal(k, (16, 1_000_000), jnp.float32)
+    w = jnp.ones((16,)) / 16
+    us_ref = timeit(jax.jit(ref.fedavg_reduce), u, w)
+    us_pal = timeit(lambda a, b: fedavg_reduce(a, b, interpret=interp), u, w)
+    err = float(jnp.max(jnp.abs(fedavg_reduce(u, w, interpret=interp) - ref.fedavg_reduce(u, w))))
+    print(f"fedavg_reduce_oracle,{us_ref:.1f},K=16 P=1e6")
+    print(f"fedavg_reduce_pallas,{us_pal:.1f},maxerr={err:.1e}")
+
+    B, Hkv, G, D, C = 4, 8, 4, 128, 4096
+    ks = jax.random.split(k, 3)
+    q = jax.random.normal(ks[0], (B, Hkv, G, D))
+    kk = jax.random.normal(ks[1], (B, C, Hkv, D))
+    vv = jax.random.normal(ks[2], (B, C, Hkv, D))
+    kvp = jnp.broadcast_to(jnp.arange(C)[None], (B, C)).astype(jnp.int32)
+    pos = jnp.full((B,), C - 1, jnp.int32)
+    us_ref = timeit(jax.jit(lambda *a: ref.swa_decode(*a, window=1024)), q, kk, vv, kvp, pos)
+    us_pal = timeit(lambda *a: swa_decode(*a, window=1024, interpret=interp), q, kk, vv, kvp, pos)
+    err = float(jnp.max(jnp.abs(
+        swa_decode(q, kk, vv, kvp, pos, window=1024, interpret=interp)
+        - ref.swa_decode(q, kk, vv, kvp, pos, window=1024))))
+    print(f"swa_decode_oracle,{us_ref:.1f},B4 Hkv8 G4 D128 C4096 W1024")
+    print(f"swa_decode_pallas,{us_pal:.1f},maxerr={err:.1e}")
+
+    from repro.kernels import ssd_scan
+    B2, S2, nh, hp, ds, Q = 2, 512, 8, 32, 32, 64
+    ks2 = jax.random.split(jax.random.key(1), 5)
+    xh = jax.random.normal(ks2[0], (B2, S2, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks2[1], (B2, S2, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks2[2], (nh,)))
+    Bss = jax.random.normal(ks2[3], (B2, S2, ds))
+    Css = jax.random.normal(ks2[4], (B2, S2, ds))
+    us_ref = timeit(jax.jit(ref.ssd_naive), xh, dt, A, Bss, Css)
+    us_pal = timeit(lambda *a: ssd_scan(*a, chunk=Q, interpret=interp), xh, dt, A, Bss, Css)
+    y1, _ = ssd_scan(xh, dt, A, Bss, Css, chunk=Q, interpret=interp)
+    y0, _ = ref.ssd_naive(xh, dt, A, Bss, Css)
+    err = float(jnp.max(jnp.abs(y1 - y0)))
+    print(f"ssd_scan_oracle,{us_ref:.1f},B2 S512 nh8 hp32 ds32")
+    print(f"ssd_scan_pallas,{us_pal:.1f},maxerr={err:.1e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""§Roofline report: three-term roofline per (arch x shape) from the
+dry-run artifacts (see src/repro/launch/dryrun.py and EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import ART
+from repro.roofline import analyze_record, load_artifacts, render_table
+
+
+def main(mesh: str = "pod16x16"):
+    recs = load_artifacts(os.path.join(ART, "dryrun"), mesh)
+    if not recs:
+        print(f"roofline,NO_ARTIFACTS,run python -m repro.launch.dryrun first")
+        return
+    rows = [r for r in map(analyze_record, recs) if r]
+    print(render_table(rows))
+    # CSV duplicates for machine parsing
+    for r in rows:
+        print(
+            f"roofline,{r.arch},{r.shape},compute_ms={1e3*r.compute_s:.2f},"
+            f"memory_ms={1e3*r.memory_s:.2f},collective_ms={1e3*r.collective_s:.2f},"
+            f"dominant={r.dominant},useful={r.useful_ratio:.2f},"
+            f"fits={'y' if r.fits_hbm else 'N'}"
+        )
+
+
+if __name__ == "__main__":
+    main()

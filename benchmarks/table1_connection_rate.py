@@ -1,0 +1,54 @@
+"""Paper Tab. I: time to 0.5 test accuracy vs connection rate (CR).
+
+Claim under test: contextual selection reaches the target fastest at every
+CR in {1.0, 0.5, 0.2}; its reduction rate vs gossip stays high (paper: >20x)
+even at CR=0.2.  Gossip at CR=1.0 is the 1x baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Uncached, fl_run
+
+TARGET = 0.5
+CRS = (1.0, 0.5, 0.2)
+STRATS = ("data", "network", "contextual")
+DATASET = "mnist"
+
+
+def _tta(r):
+    for rec in r["rounds"]:
+        if rec["test_acc"] >= TARGET:
+            return rec["sim_time"]
+    return None
+
+
+def main(rounds=40, samples=128, num_clients=100):
+    try:
+        base = fl_run(DATASET, "gossip", rounds, num_clients=num_clients,
+                      samples_per_client=samples)
+    except Uncached:
+        print("table1,PENDING (gossip baseline not in cache)")
+        return
+    t_gossip = _tta(base)
+    t_ref = t_gossip if t_gossip else max(r["sim_time"] for r in base["rounds"])
+    suffix = "" if t_gossip else " (gossip never reached target; horizon used)"
+    print(f"table1,gossip,CR=1.0,time_s={t_ref:.1f},reduction=1.00x{suffix}")
+    for cr in CRS:
+        for strat in STRATS:
+            # CR=1.0 shares cache keys with the fig3 runs (no kwarg)
+            kw = {} if cr == 1.0 else {"connection_rate": cr}
+            try:
+                r = fl_run(DATASET, strat, rounds, num_clients=num_clients,
+                           samples_per_client=samples, **kw)
+            except Uncached:
+                print(f"table1,{strat},CR={cr},PENDING")
+                continue
+            t = _tta(r)
+            if t is None:
+                print(f"table1,{strat},CR={cr},time_s=>,horizon,reduction=<1x")
+            else:
+                print(f"table1,{strat},CR={cr},time_s={t:.1f},"
+                      f"reduction={t_ref/t:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Checkpointing: flat-key .npz snapshots of arbitrary pytrees.
+
+Orbax is not available offline; this implements the same contract at the
+scale we run on CPU: atomic save (tmp + rename), step-indexed directories,
+restore into an existing pytree structure (dtype/shape checked).  On a real
+pod this layer is where a tensorstore-backed store would slot in — the
+interface (``save(step, tree)`` / ``restore(step, like)``) is unchanged.
+"""
+from repro.checkpoint.npz import CheckpointManager
+
+__all__ = ["CheckpointManager"]

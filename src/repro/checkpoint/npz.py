@@ -1,0 +1,83 @@
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "||"
+
+
+def _flatten_with_paths(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    """Step-indexed npz checkpoints with atomic writes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:09d}.npz")
+
+    def save(self, step: int, tree: PyTree) -> str:
+        flat = _flatten_with_paths(tree)
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        os.close(fd)
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, self._path(step))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        self._gc()
+        return self._path(step)
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.match(r"step_(\d+)\.npz$", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: PyTree) -> PyTree:
+        """Restore into the structure of ``like`` (shape/dtype validated)."""
+        with np.load(self._path(step)) as data:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+            leaves = []
+            for path, leaf in flat:
+                key = _SEP.join(str(p) for p in path)
+                if key not in data:
+                    raise KeyError(f"checkpoint missing leaf {key!r}")
+                arr = data[key]
+                if tuple(arr.shape) != tuple(leaf.shape):
+                    raise ValueError(
+                        f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}"
+                    )
+                leaves.append(arr.astype(leaf.dtype))
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(like), leaves
+            )
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            os.unlink(self._path(s))

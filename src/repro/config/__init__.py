@@ -1,0 +1,22 @@
+"""Config system: dataclasses for models, shapes, meshes, FL and traffic."""
+from repro.config.base import (
+    ModelConfig,
+    ShapeConfig,
+    MeshConfig,
+    FLConfig,
+    TrafficConfig,
+    TrainConfig,
+    INPUT_SHAPES,
+    shape_by_name,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "MeshConfig",
+    "FLConfig",
+    "TrafficConfig",
+    "TrainConfig",
+    "INPUT_SHAPES",
+    "shape_by_name",
+]

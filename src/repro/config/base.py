@@ -1,0 +1,273 @@
+"""Dataclass configuration for every subsystem.
+
+``ModelConfig`` is the single source of truth for an architecture; the model
+zoo (`repro.models.zoo.build_model`) dispatches on ``family``.  Input shapes
+are the four assigned workload shapes; meshes are the production single-pod
+and multi-pod meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (exact assigned values; see configs/)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | cnn | mlp
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    router_aux_loss: float = 0.01
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+
+    # --- attention flavour ---
+    rope_theta: float = 10_000.0
+    rope_style: str = "full"  # full | 2d (chatglm rotary on half dims) | none
+    sliding_window: int = 0  # 0 => full attention
+    # per-layer pattern cycled over depth, e.g. ("local","global") for gemma2.
+    layer_pattern: Tuple[str, ...] = ()
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    qkv_bias: bool = False
+    max_position_embeddings: int = 131_072
+    kv_repeat: int = 1  # repeat kv heads so the cache head axis is mesh-divisible
+    embed_scale: bool = False  # gemma-style sqrt(d_model) embedding scale
+    zero_centered_norm: bool = False  # gemma-style (1 + w) RMSNorm
+    attn_block_q: int = 512  # query block for the flash-style attention scan
+
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0  # number of (stubbed) frame embeddings
+
+    # --- VLM (internvl2) ---
+    num_image_tokens: int = 0  # stubbed patch embeddings prepended
+
+    # --- hybrid (hymba) ---
+    hybrid_parallel: bool = False  # attention and SSM heads in parallel
+
+    # --- CNN/MLP (the paper's own FL models) ---
+    image_shape: Tuple[int, int, int] = (0, 0, 0)
+    num_classes: int = 0
+    channels: Tuple[int, ...] = ()
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+    remat_policy: str = "minimal"  # none | minimal | full
+    scan_layers: bool = True
+    loss_chunk: int = 512  # CE computed in seq chunks (logits never fully
+    # materialized); 0 disables.  §Perf iteration: fp32 (B,S,V) buffers
+    # dominated train-shape HBM before this.
+    train_microbatches: int = 1  # gradient-accumulation microbatches
+    serve_fsdp: bool = False  # shard weights over data at serving too (models
+    # whose replicated-over-data weights exceed HBM, e.g. internvl2-76b)
+    sharding_profile: str = "tp"  # "tp" | "dp" (train-time; sub-1B models are
+    # collective-bound under TP=16 — see sharding.rules.profile_rules)
+    variant: str = ""
+    source: str = ""  # citation for the assigned config
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def layer_kind(self, i: int) -> str:
+        """Attention flavour of layer ``i`` ('full', 'local', 'global')."""
+        if not self.layer_pattern:
+            return "local" if self.sliding_window else "full"
+        return self.layer_pattern[i % len(self.layer_pattern)]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Closed-form parameter count (used for napkin math + latency model)."""
+        d, h, kv, hd, ff, V = (
+            self.d_model,
+            self.num_heads,
+            self.num_kv_heads,
+            self.resolved_head_dim,
+            self.d_ff,
+            self.padded_vocab,
+        )
+        if self.family in ("cnn", "mlp"):
+            return 0  # counted from the real tree; shapes are tiny anyway
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        if self.family == "moe":
+            mlp = self.num_experts * 3 * d * ff + d * self.num_experts
+        else:
+            mlp = 3 * d * ff
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di, ns, nh = self.ssm_d_inner, self.ssm_state, self.ssm_num_heads
+            # z,x,B,C,dt projections + depthwise conv + out proj + A/D/dt_bias
+            ssm = (
+                d * (2 * di + 2 * ns + nh)
+                + self.ssm_conv_width * (di + 2 * ns)
+                + di * d
+                + 3 * nh
+                + di
+            )
+        if self.family == "ssm":
+            attn = 0
+            mlp = 0
+        per_layer = attn + mlp + ssm + 2 * d
+        total = self.num_layers * per_layer + V * d + d
+        if not self.tie_embeddings:
+            total += V * d
+        if self.encoder_layers:
+            enc = self.encoder_layers * (d * h * hd * 2 + 2 * d * kv * hd + 3 * d * ff + 2 * d)
+            total += enc + d * h * hd + 2 * d * kv * hd  # + cross-attn kv proj
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE uses top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_total = self.param_count() - self.num_layers * (
+            self.num_experts * 3 * d * ff
+        )
+        return int(dense_total + self.num_layers * self.experts_per_token * 3 * d * ff)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned workload shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown input shape {name!r}; known: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Distributed training-step hyperparameters (arch-pool workloads)."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"  # adamw | sgd | momentum
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    """Digital-twin road / radio model (DESIGN.md §5)."""
+
+    num_vehicles: int = 100
+    ring_length_m: float = 10_000.0
+    num_lanes: int = 3
+    rsu_spacing_m: float = 1_000.0
+    mean_speed_mps: float = 14.0  # ~50 km/h urban
+    speed_std_mps: float = 6.0
+    accel_std: float = 0.8  # OU noise scale on acceleration
+    ou_theta: float = 0.3
+    cam_rate_hz: float = 10.0
+    # radio
+    carrier_ghz: float = 5.9
+    bandwidth_hz: float = 8e6
+    eirp_dbm: float = 33.0
+    noise_dbm: float = -95.0
+    snr_min_db: float = 3.0
+    backhaul_s: float = 0.010  # I2N fixed backhaul latency
+    queue_s_per_vehicle: float = 0.010  # queueing per vehicle on the same RSU
+    # FL payloads
+    overhead_bytes: int = 2_048
+    sim_dt_s: float = 0.1
+    predict_horizon_s: float = 5.0
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Federated-learning round configuration (paper §IV-A defaults)."""
+
+    num_clients: int = 100
+    select_fraction: float = 0.10  # "general selection rate ... 10%"
+    local_epochs: int = 1
+    batch_size: int = 64
+    learning_rate: float = 1e-3
+    strategy: str = "contextual"  # greedy|gossip|data|network|contextual
+    num_clusters: int = 10
+    gamma: float = 0.10  # Fast-gamma election fraction
+    sketch_dim: int = 1024
+    connection_rate: float = 1.0  # CR in Tab. I
+    classes_per_client: int = 2  # default non-iid: 2 of 10 classes
+    dirichlet_alpha: float = 0.0  # >0 switches to Dirichlet partitioning
+    samples_per_client: int = 512
+    compute_s_per_epoch: float = 0.5  # client-side local training time model
+    server_agg_s: float = 0.05
+    recluster_every: int = 5  # rounds between re-clustering (deadline rule)
+    seed: int = 0

@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+Each module defines ``config()`` (the exact assigned production config,
+source cited) and ``smoke_config()`` (a reduced same-family variant: <=2
+layers, d_model <= 512, <= 4 experts) used by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.utils import Registry
+
+ARCHS: Registry = Registry("architecture")
+SMOKE: Registry = Registry("smoke-architecture")
+
+from repro.configs import (  # noqa: E402  (registration imports)
+    phi35_moe_42b,
+    mixtral_8x7b,
+    chatglm3_6b,
+    internvl2_76b,
+    whisper_small,
+    qwen15_05b,
+    mistral_nemo_12b,
+    hymba_15b,
+    gemma2_9b,
+    mamba2_130m,
+    paper_models,
+)
+
+ALL_ARCH_IDS = tuple(ARCHS.names())
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return ARCHS.get(arch_id)()
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return SMOKE.get(arch_id)()

@@ -1,0 +1,41 @@
+"""chatglm3-6b — dense GQA(kv=2) with 2d RoPE [arXiv:2406.12793]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "chatglm3-6b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="dense",
+        num_layers=28,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        d_ff=13696,
+        vocab_size=65024,
+        kv_repeat=8,  # kv 2 -> 16
+        rope_style="2d",  # chatglm rotates half the head dim
+        qkv_bias=True,  # chatglm uses qkv bias
+        train_microbatches=4,
+        max_position_embeddings=32_768,
+        source="arXiv:2406.12793",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        kv_repeat=1,
+        dtype="float32",
+        remat_policy="none",
+    )

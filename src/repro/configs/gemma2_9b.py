@@ -1,0 +1,62 @@
+"""gemma2-9b — dense GQA, local/global alternation, logit softcaps
+[arXiv:2408.00118].
+
+For ``long_500k`` the ``swa-capped`` variant windows the global layers at
+32k (a documented sliding-window variant, DESIGN.md §4); the base config
+keeps faithful full-attention global layers.
+"""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "gemma2-9b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        num_heads=16,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=256000,
+        head_dim=256,  # gemma2-9b decouples head_dim
+        kv_repeat=2,
+        sliding_window=4096,
+        layer_pattern=("local", "global"),
+        attn_logit_softcap=50.0,
+        final_logit_softcap=30.0,
+        zero_centered_norm=True,
+        embed_scale=True,
+        train_microbatches=4,
+        max_position_embeddings=8_192,
+        source="arXiv:2408.00118",
+    )
+
+
+def long_ctx_config() -> ModelConfig:
+    """The sliding-window variant that runs long_500k (global layers 32k)."""
+    return config().replace(
+        variant="swa-capped", max_position_embeddings=1_048_576
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        kv_repeat=1,
+        sliding_window=32,
+        max_position_embeddings=256,
+        dtype="float32",
+        remat_policy="none",
+    )

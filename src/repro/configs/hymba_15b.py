@@ -1,0 +1,56 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads per layer
+[arXiv:2411.13676].
+
+Hybrid block: the normed input feeds a sliding-window GQA branch AND a
+mamba2 mixer branch in parallel; the two normalized outputs are averaged
+(the paper's fusion).  Simplifications noted in DESIGN.md: uniform SWA
+(Hymba keeps 3 full-attn layers) and no meta tokens.
+25 heads / kv 5 do not divide the model=16 mesh axis -> attention heads
+replicate (1.5B model; the MLP and mamba projections still shard).
+"""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "hymba-1.5b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="hybrid",
+        num_layers=32,
+        d_model=1600,
+        num_heads=25,
+        num_kv_heads=5,
+        d_ff=5504,
+        vocab_size=32001,
+        head_dim=64,
+        ssm_state=16,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        sliding_window=1024,
+        max_position_embeddings=1_048_576,
+        train_microbatches=4,
+        source="arXiv:2411.13676",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=192,
+        num_heads=6,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=384,
+        vocab_size=512,
+        ssm_state=16,
+        ssm_head_dim=32,
+        ssm_chunk=16,
+        sliding_window=32,
+        dtype="float32",
+        remat_policy="none",
+    )

@@ -1,0 +1,52 @@
+"""internvl2-76b — VLM backbone (InternViT stubbed) [arXiv:2404.16821].
+
+The language decoder consumes stubbed patch embeddings (``num_image_tokens``
+precomputed (B, 256, d) vectors from input_specs) interleaved before the
+text tokens — the allowed modality-frontend carve-out (DESIGN.md §4).
+"""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "internvl2-76b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        kv_repeat=2,
+        num_image_tokens=256,
+        rope_theta=5e5,
+        max_position_embeddings=131_072,
+        # 80 layers x (B,S,d) saved carries = 86 GB/device at batch 256;
+        # 8-way gradient accumulation brings the working set under HBM
+        # (§Perf iteration, EXPERIMENTS.md).
+        train_microbatches=16,
+        serve_fsdp=True,
+        attn_block_q=256,
+        source="arXiv:2404.16821",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        kv_repeat=1,
+        num_image_tokens=4,
+        dtype="float32",
+        remat_policy="none",
+    )

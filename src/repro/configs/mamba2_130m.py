@@ -1,0 +1,45 @@
+"""mamba2-130m — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "mamba2-130m"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        num_heads=0,  # attention-free
+        num_kv_heads=0,
+        d_ff=0,  # mamba2 blocks have no separate MLP
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_head_dim=64,  # d_inner 1536 -> 24 SSD heads
+        ssm_expand=2,
+        ssm_chunk=128,
+        rope_style="none",
+        tie_embeddings=True,
+        sharding_profile="dp",
+        remat_policy="dots",
+        loss_chunk=0,
+        max_position_embeddings=1_048_576,
+        source="arXiv:2405.21060",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        vocab_size=512,
+        ssm_state=32,
+        ssm_head_dim=32,
+        ssm_chunk=16,
+        dtype="float32",
+        remat_policy="none",
+    )

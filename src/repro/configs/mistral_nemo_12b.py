@@ -1,0 +1,43 @@
+"""mistral-nemo-12b — dense GQA, 128k context, head_dim 128
+[hf:mistralai/Mistral-Nemo-Base-2407]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "mistral-nemo-12b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=131072,
+        head_dim=128,  # nemo decouples head_dim from d_model/num_heads
+        kv_repeat=2,
+        rope_theta=1e6,
+        max_position_embeddings=131_072,  # "128k ctx"
+        train_microbatches=8,
+        source="hf:mistralai/Mistral-Nemo-Base-2407",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        head_dim=32,
+        kv_repeat=1,
+        dtype="float32",
+        remat_policy="none",
+    )

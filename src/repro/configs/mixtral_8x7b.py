@@ -1,0 +1,46 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attn [arXiv:2401.04088]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "mixtral-8x7b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=32000,
+        num_experts=8,
+        experts_per_token=2,
+        kv_repeat=2,
+        sliding_window=4096,
+        layer_pattern=("local",),  # every layer windowed (SWA), Mistral-style
+        rope_theta=1e6,
+        max_position_embeddings=131_072,
+        train_microbatches=8,
+        source="arXiv:2401.04088",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        num_experts=4,
+        kv_repeat=1,
+        sliding_window=32,
+        dtype="float32",
+        remat_policy="none",
+    )

@@ -1,0 +1,50 @@
+"""The paper's own FL task models (§IV): MLP / CNN-S / CNN-M.
+
+"We train deep learning models with different sizes on MNIST, CIFAR-10 and
+SVHN" — sizes unspecified; these three differ in parameter bytes so the
+latency model sees distinct payloads (DESIGN.md §9).
+"""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+
+def _mk(name, image_shape, channels, d_ff):
+    return ModelConfig(
+        name=name,
+        family="cnn" if channels else "mlp",
+        num_layers=len(channels),
+        d_model=0,
+        num_heads=0,
+        num_kv_heads=0,
+        d_ff=d_ff,
+        vocab_size=0,
+        image_shape=image_shape,
+        num_classes=10,
+        channels=channels,
+        dtype="float32",
+    )
+
+
+@ARCHS.register("fl-mnist-mlp")
+def mnist_mlp() -> ModelConfig:
+    return _mk("fl-mnist-mlp", (28, 28, 1), (), 200)
+
+
+@ARCHS.register("fl-cifar10-cnn")
+def cifar_cnn() -> ModelConfig:
+    return _mk("fl-cifar10-cnn", (32, 32, 3), (32, 64), 256)
+
+
+@ARCHS.register("fl-svhn-cnn")
+def svhn_cnn() -> ModelConfig:
+    return _mk("fl-svhn-cnn", (32, 32, 3), (24, 48), 192)
+
+
+for _id in ("fl-mnist-mlp", "fl-cifar10-cnn", "fl-svhn-cnn"):
+    SMOKE.register(_id)(ARCHS.get(_id))
+
+PAPER_MODEL_BY_DATASET = {
+    "mnist": "fl-mnist-mlp",
+    "cifar10": "fl-cifar10-cnn",
+    "svhn": "fl-svhn-cnn",
+}

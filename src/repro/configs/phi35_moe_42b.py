@@ -1,0 +1,43 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE [hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "phi3.5-moe-42b-a6.6b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=6400,
+        vocab_size=32064,
+        num_experts=16,
+        experts_per_token=2,
+        kv_repeat=2,  # kv 8 -> 16 so the cache shards over model=16
+        rope_theta=10_000.0,
+        max_position_embeddings=131_072,
+        train_microbatches=4,
+        source="hf:microsoft/Phi-3.5-MoE-instruct",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=512,
+        vocab_size=512,
+        num_experts=4,
+        kv_repeat=1,
+        dtype="float32",
+        remat_policy="none",
+    )

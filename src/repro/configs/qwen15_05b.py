@@ -1,0 +1,42 @@
+"""qwen1.5-0.5b — dense MHA with QKV bias [hf:Qwen/Qwen1.5-0.5B]."""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "qwen1.5-0.5b"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="dense",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=2816,
+        vocab_size=151936,
+        qkv_bias=True,
+        tie_embeddings=True,  # qwen1.5-0.5b ties lm_head to the embedding
+        rope_theta=1e6,
+        sharding_profile="dp",
+        remat_policy="dots",
+        loss_chunk=0,
+        max_position_embeddings=32_768,
+        source="hf:Qwen/Qwen1.5-0.5B",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=8,
+        num_kv_heads=8,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        remat_policy="none",
+    )

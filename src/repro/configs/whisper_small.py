@@ -1,0 +1,51 @@
+"""whisper-small — encoder-decoder ASR backbone, conv frontend stubbed
+[arXiv:2212.04356].
+
+``input_specs`` feeds precomputed frame embeddings (B, 1500, 768) to the
+encoder (the mel+conv stub).  Decode shapes exercise the decoder with a
+self-attention KV cache plus cached cross-attention K/V.  ``long_500k`` is
+skipped for this arch (DESIGN.md §4).
+"""
+from repro.config import ModelConfig
+from repro.configs import ARCHS, SMOKE
+
+ID = "whisper-small"
+
+
+@ARCHS.register(ID)
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ID,
+        family="encdec",
+        num_layers=12,
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        encoder_layers=12,
+        encoder_seq=1500,
+        rope_style="none",  # whisper uses absolute positions
+        attn_block_q=256,  # heads replicate on model=16; keep transients low
+        train_microbatches=2,
+        max_position_embeddings=33_024,  # decode_32k budget
+        source="arXiv:2212.04356",
+    )
+
+
+@SMOKE.register(ID)
+def smoke_config() -> ModelConfig:
+    return config().replace(
+        name=ID + "-smoke",
+        num_layers=2,
+        encoder_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=256,
+        vocab_size=512,
+        encoder_seq=16,
+        max_position_embeddings=128,
+        dtype="float32",
+        remat_policy="none",
+    )

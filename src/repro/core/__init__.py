@@ -1,0 +1,39 @@
+"""The paper's contribution: contextual client selection for FL in C-ITS.
+
+Pipeline stages (paper Fig. 2):
+  1. V2X message fusion          -> repro.core.fusion  (CAM/CPM -> RTTG)
+  2. RTTG prediction             -> repro.core.trajectory
+  3. Data-level client grouping  -> repro.core.clustering
+  4. Network-level election      -> repro.core.selection (Fast-gamma)
+
+The traffic digital twin (ground truth the messages observe) lives in
+repro.core.twin; the analytic radio/latency model in repro.core.network.
+"""
+from repro.core.twin import TrafficTwin, TwinState
+from repro.core.messages import emit_cams, emit_cpms
+from repro.core.fusion import fuse_messages
+from repro.core.rttg import RTTG, build_rttg
+from repro.core.trajectory import predict_rttg
+from repro.core.network import latency_model, connectivity
+from repro.core.clustering import update_sketch, pairwise_cosine, kmeans_cluster
+from repro.core.selection import select_clients, STRATEGIES
+from repro.core.pipeline import ContextualSelector
+
+__all__ = [
+    "TrafficTwin",
+    "TwinState",
+    "emit_cams",
+    "emit_cpms",
+    "fuse_messages",
+    "RTTG",
+    "build_rttg",
+    "predict_rttg",
+    "latency_model",
+    "connectivity",
+    "update_sketch",
+    "pairwise_cosine",
+    "kmeans_cluster",
+    "select_clients",
+    "STRATEGIES",
+    "ContextualSelector",
+]

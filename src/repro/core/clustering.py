@@ -1,0 +1,95 @@
+"""Stage 3 — data-level client grouping (paper Fig. 2, step 3).
+
+Clients report model updates; gradient similarity proxies data-distribution
+similarity (Yin et al., the paper's [20]).  We sketch each update with a
+seeded random projection (count-sketch-free JL projection, so 1M-parameter
+updates become ``sketch_dim`` vectors), L2-normalize, and cluster with
+cosine k-means.  The pairwise-cosine Gram matrix — the O(N^2 D) hot spot —
+is the Pallas ``pairwise_cosine`` kernel on TPU (jnp fallback elsewhere).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import fold_in_str
+
+
+@functools.partial(jax.jit, static_argnames=("sketch_dim",))
+def update_sketch(update_vec: jax.Array, key: jax.Array, sketch_dim: int) -> jax.Array:
+    """Count-sketch of a flat update vector; unit-normalized.
+
+    Classic (sign, bucket) sketch with bucket(i) = i mod sketch_dim and a
+    seeded Rademacher sign vector — an unbiased JL-style projection whose
+    cost is one O(P) sweep (a dense Gaussian projection would generate
+    P x sketch_dim normals per report and dominates the FL loop on CPU).
+    Every client uses the SAME key so sketches are comparable.
+    """
+    D = update_vec.shape[0]
+    pad = (-D) % sketch_dim
+    sign_bits = jax.random.bernoulli(
+        fold_in_str(key, "sketch-sign"), 0.5, (D + pad,)
+    )
+    sign = jnp.where(sign_bits, 1.0, -1.0)
+    x = jnp.pad(update_vec.astype(jnp.float32), (0, pad)) * sign
+    acc = jnp.sum(x.reshape(-1, sketch_dim), axis=0)
+    norm = jnp.linalg.norm(acc)
+    return acc / jnp.maximum(norm, 1e-12)
+
+
+def pairwise_cosine(sketches: jax.Array) -> jax.Array:
+    """(N, D) -> (N, N) cosine similarity.  Pure-jnp reference; the Pallas
+    kernel (repro.kernels.pairwise_cosine) implements the same contract."""
+    x = sketches.astype(jnp.float32)
+    norms = jnp.linalg.norm(x, axis=1, keepdims=True)
+    xn = x / jnp.maximum(norms, 1e-12)
+    return xn @ xn.T
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_cluster(
+    sketches: jax.Array, key: jax.Array, k: int, iters: int = 25
+) -> tuple[jax.Array, jax.Array]:
+    """Cosine k-means on unit sketches.  Returns (labels (N,), centroids).
+
+    Deterministic given ``key``; k-means++-style greedy farthest-point init;
+    Lloyd iterations via lax.scan.  Empty clusters re-seed at the point
+    farthest from its centroid.
+    """
+    x = sketches.astype(jnp.float32)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+    N, D = x.shape
+
+    # farthest-point init
+    first = jax.random.randint(fold_in_str(key, "kmeans-init"), (), 0, N)
+    cent0 = jnp.zeros((k, D)).at[0].set(x[first])
+
+    def init_body(carry, i):
+        cents, n_done = carry
+        sim = x @ cents.T  # (N, k)
+        sim = jnp.where(jnp.arange(k)[None, :] < n_done, sim, -jnp.inf)
+        best = jnp.max(sim, axis=1)  # most-similar chosen centroid
+        nxt = jnp.argmin(best)  # farthest point
+        cents = cents.at[n_done].set(x[nxt])
+        return (cents, n_done + 1), None
+
+    (cents, _), _ = jax.lax.scan(init_body, (cent0, 1), jnp.arange(k - 1))
+
+    def lloyd(cents, _):
+        sim = x @ cents.T
+        labels = jnp.argmax(sim, axis=1)
+        onehot = jax.nn.one_hot(labels, k, dtype=jnp.float32)  # (N, k)
+        sums = onehot.T @ x  # (k, D)
+        counts = jnp.sum(onehot, axis=0)
+        new = sums / jnp.maximum(counts[:, None], 1e-9)
+        # re-seed empty clusters at the globally worst-fit point
+        worst = jnp.argmin(jnp.max(sim, axis=1))
+        new = jnp.where(counts[:, None] > 0, new, x[worst][None, :])
+        new = new / jnp.maximum(jnp.linalg.norm(new, axis=1, keepdims=True), 1e-12)
+        return new, None
+
+    cents, _ = jax.lax.scan(lloyd, cents, None, length=iters)
+    labels = jnp.argmax(x @ cents.T, axis=1)
+    return labels, cents

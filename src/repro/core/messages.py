@@ -1,0 +1,76 @@
+"""V2X messages: CAM (self state) and CPM (perceived neighbours).
+
+ETSI EN 302 637-2 CAMs carry the sender's own kinematic state; TS 103 324
+CPMs carry the sender's *perceived objects*.  Here both are noisy
+observations of the twin's ground truth, represented as dense arrays so the
+fusion stage is one jit'd program:
+
+CAM batch:  {"src": (N,), "obj": (N,), "pos","speed","accel": (N,), "var": (N,)}
+CPM batch:  {"src": (N,P), "obj": (N,P), "pos","speed","accel": (N,P),
+             "var": (N,P), "valid": (N,P)}
+
+``P`` is the (static) max perceived objects per sender; ``valid`` masks real
+detections.  Positions are arc positions on the ring.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrafficConfig
+from repro.core.twin import TwinState
+from repro.utils import fold_in_str
+
+CAM_POS_STD = 1.0  # GNSS-grade self localization (m)
+CAM_SPD_STD = 0.3
+CPM_POS_STD = 3.0  # remote perception is noisier (m)
+CPM_SPD_STD = 1.0
+PERCEPTION_RANGE_M = 150.0
+MAX_PERCEIVED = 8
+
+
+def _ring_dist(a, b, length):
+    d = jnp.abs(a - b)
+    return jnp.minimum(d, length - d)
+
+
+def emit_cams(state: TwinState, cfg: TrafficConfig, key: jax.Array) -> dict:
+    """Every CAV reports its own state with GNSS-grade noise."""
+    N = cfg.num_vehicles
+    k1, k2, k3 = jax.random.split(fold_in_str(key, "cam"), 3)
+    ids = jnp.arange(N)
+    return {
+        "src": ids,
+        "obj": ids,
+        "pos": jnp.mod(
+            state.pos + CAM_POS_STD * jax.random.normal(k1, (N,)), cfg.ring_length_m
+        ),
+        "speed": state.speed + CAM_SPD_STD * jax.random.normal(k2, (N,)),
+        "accel": state.accel + 0.1 * jax.random.normal(k3, (N,)),
+        "var": jnp.full((N,), CAM_POS_STD**2),
+    }
+
+
+def emit_cpms(state: TwinState, cfg: TrafficConfig, key: jax.Array) -> dict:
+    """Each CAV perceives up to MAX_PERCEIVED nearest neighbours in range."""
+    N, P = cfg.num_vehicles, MAX_PERCEIVED
+    k1, k2, k3 = jax.random.split(fold_in_str(key, "cpm"), 3)
+    d = _ring_dist(state.pos[:, None], state.pos[None, :], cfg.ring_length_m)
+    d = d + 1e9 * jnp.eye(N)  # don't perceive yourself
+    # P nearest neighbours per sender
+    dist_p, obj = jax.lax.top_k(-d, P)
+    dist_p = -dist_p  # (N, P)
+    valid = dist_p < PERCEPTION_RANGE_M
+    # noise grows with range
+    scale = 1.0 + dist_p / PERCEPTION_RANGE_M
+    pos_n = CPM_POS_STD * scale * jax.random.normal(k1, (N, P))
+    spd_n = CPM_SPD_STD * scale * jax.random.normal(k2, (N, P))
+    return {
+        "src": jnp.broadcast_to(jnp.arange(N)[:, None], (N, P)),
+        "obj": obj,
+        "pos": jnp.mod(state.pos[obj] + pos_n, cfg.ring_length_m),
+        "speed": state.speed[obj] + spd_n,
+        "accel": state.accel[obj] + 0.2 * jax.random.normal(k3, (N, P)),
+        "var": (CPM_POS_STD * scale) ** 2,
+        "valid": valid,
+    }

@@ -1,0 +1,65 @@
+"""Digital-twin radio / latency model (DESIGN.md §5).
+
+Maps an RTTG snapshot to per-client FL communication latency:
+
+  PL(d)   = 32.4 + 20 log10(f_GHz) + 30 log10(d)          (3GPP UMi-style)
+  SNR     = EIRP - PL - noise_floor                        (dB)
+  rate    = (B / n_attached) * log2(1 + 10^(SNR/10))       (shared Shannon)
+  t_rtt   = bytes/rate_up + bytes/rate_down + 2*(backhaul + prop)
+            + queue(n_attached) + handover(speed, cell-edge)
+
+Connectivity: SNR above threshold AND (optionally) a forced connection-rate
+mask reproducing Tab. I's CR in {1.0, 0.5, 0.2}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrafficConfig
+from repro.core.rttg import RTTG
+
+_C = 299_792_458.0
+
+
+def snr_db(rttg: RTTG, cfg: TrafficConfig) -> jax.Array:
+    d = jnp.maximum(rttg.rsu_dist, 1.0)
+    pl = 32.4 + 20.0 * jnp.log10(cfg.carrier_ghz) + 30.0 * jnp.log10(d)
+    return cfg.eirp_dbm - pl - cfg.noise_dbm
+
+
+def connectivity(
+    rttg: RTTG,
+    cfg: TrafficConfig,
+    connection_rate: float = 1.0,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Bool (N,) connected mask."""
+    ok = snr_db(rttg, cfg) >= cfg.snr_min_db
+    if connection_rate < 1.0:
+        assert key is not None, "forced CR needs a PRNG key"
+        forced = jax.random.bernoulli(key, connection_rate, ok.shape)
+        ok = ok & forced
+    return ok
+
+
+def latency_model(rttg: RTTG, model_bytes, cfg: TrafficConfig) -> jax.Array:
+    """Round-trip FL communication latency per client, seconds (N,).
+
+    Disconnection is not encoded here (callers combine with
+    ``connectivity``); the model is smooth so the predictor can rank
+    clients even near the SNR threshold.
+    """
+    snr = snr_db(rttg, cfg)
+    snr_lin = jnp.power(10.0, snr / 10.0)
+    # per-RSU bandwidth shared by attached vehicles (uplink ~= downlink here)
+    rate = cfg.bandwidth_hz / jnp.maximum(rttg.load, 1.0) * jnp.log2(1.0 + snr_lin)
+    rate = jnp.maximum(rate, 1e4)  # 10 kb/s floor avoids infs off-coverage
+    payload_bits = 8.0 * (jnp.asarray(model_bytes, jnp.float32) + cfg.overhead_bytes)
+    t_air = 2.0 * payload_bits / rate  # up + down
+    t_prop = 2.0 * rttg.rsu_dist / _C + 2.0 * cfg.backhaul_s
+    t_queue = cfg.queue_s_per_vehicle * rttg.load
+    # cell-edge handover penalty grows with speed near the RSU boundary
+    edge = rttg.rsu_dist / (0.5 * cfg.rsu_spacing_m)  # ~1 at the cell edge
+    t_handover = 0.2 * jnp.clip(edge - 0.7, 0.0, 1.0) * rttg.speed / cfg.mean_speed_mps
+    return t_air + t_prop + t_queue + t_handover

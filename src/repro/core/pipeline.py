@@ -1,0 +1,138 @@
+"""The four-stage contextual client-selection pipeline (paper Fig. 2).
+
+``ContextualSelector`` owns the server-side state of the pipeline: the last
+fused RTTG, per-client update sketches (with report timestamps for the
+deadline rule) and the current clustering.  Per FL round:
+
+  observe(twin_state)  -> fuse CAM/CPM into an RTTG            (stage 1)
+  predict latency      -> CA-propagate + latency model          (stage 2)
+  report_update(...)   -> refresh a client's gradient sketch    (stage 3 in)
+  recluster()          -> cosine k-means over sketches          (stage 3)
+  select(strategy,...) -> Fast-gamma / baselines                (stage 4)
+
+The same object also serves the four baseline strategies so every paradigm
+shares identical fusion/prediction inputs — the comparison isolates the
+selection rule, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig, TrafficConfig
+from repro.core.clustering import kmeans_cluster, update_sketch
+from repro.core.fusion import fuse_messages
+from repro.core.messages import emit_cams, emit_cpms
+from repro.core.network import connectivity, latency_model
+from repro.core.rttg import RTTG
+from repro.core.selection import select_clients
+from repro.core.trajectory import predict_rttg
+from repro.core.twin import TwinState
+from repro.utils import fold_in_str
+
+
+class ContextualSelector:
+    def __init__(self, fl_cfg: FLConfig, traffic_cfg: TrafficConfig, key: jax.Array):
+        self.fl = fl_cfg
+        self.traffic = traffic_cfg
+        self.key = fold_in_str(key, "selector")
+        N = fl_cfg.num_clients
+        self.sketches = jnp.zeros((N, fl_cfg.sketch_dim), jnp.float32)
+        self.sketch_age = jnp.full((N,), jnp.inf, jnp.float32)  # rounds since report
+        self.clusters = jnp.zeros((N,), jnp.int32)
+        self.rttg: Optional[RTTG] = None
+        self._round = 0
+
+        tr, fl = self.traffic, self.fl
+
+        # the whole per-round pipeline is two jitted programs: observe
+        # (stage 1) and predict+elect (stages 2+4); the FL loop calls them
+        # every round, so retracing would dominate host time.
+        @jax.jit
+        def _observe(state: TwinState, k):
+            cams = emit_cams(state, tr, k)
+            cpms = emit_cpms(state, tr, k)
+            return fuse_messages(cams, cpms, state.t, tr)
+
+        @functools.partial(jax.jit, static_argnames=("strategy", "n_select"))
+        def _elect(rttg, sketches_clusters, model_bytes, k, strategy, n_select):
+            clusters = sketches_clusters
+            future = predict_rttg(rttg, tr.predict_horizon_s, tr)
+            lat_pred = latency_model(future, model_bytes, tr)
+            connected = connectivity(
+                future, tr, fl.connection_rate, fold_in_str(k, "cr")
+            )
+            mask = select_clients(
+                strategy, fold_in_str(k, strategy), connected, lat_pred,
+                clusters, n_select, fl.gamma,
+            )
+            return mask, connected, lat_pred, future
+
+        self._observe_jit = _observe
+        self._elect_jit = _elect
+
+    # ---- stage 1: V2X fusion -------------------------------------------
+    def observe(self, twin_state: TwinState) -> RTTG:
+        k = fold_in_str(jax.random.fold_in(self.key, self._round), "observe")
+        self.rttg = self._observe_jit(twin_state, k)
+        return self.rttg
+
+    # ---- stage 2: prediction + latency ---------------------------------
+    def predicted_latency(self, model_bytes: float, horizon_s: Optional[float] = None):
+        assert self.rttg is not None, "observe() before predicted_latency()"
+        h = self.traffic.predict_horizon_s if horizon_s is None else horizon_s
+        future = predict_rttg(self.rttg, h, self.traffic)
+        return latency_model(future, model_bytes, self.traffic), future
+
+    def connected_mask(self, rttg: RTTG):
+        k = fold_in_str(jax.random.fold_in(self.key, self._round), "cr")
+        return connectivity(rttg, self.traffic, self.fl.connection_rate, k)
+
+    # ---- stage 3: data-level grouping ----------------------------------
+    def report_update(self, client_id: int, update_vec: jax.Array):
+        """Deadline rule: clients that report before the next recluster get
+        fresh sketches; others keep stale ones (age tracked)."""
+        sk = update_sketch(update_vec, self.key, self.fl.sketch_dim)
+        self.sketches = self.sketches.at[client_id].set(sk)
+        self.sketch_age = self.sketch_age.at[client_id].set(0.0)
+
+    def report_updates(self, client_ids, update_vecs):
+        sks = jax.vmap(lambda v: update_sketch(v, self.key, self.fl.sketch_dim))(
+            update_vecs
+        )
+        self.sketches = self.sketches.at[client_ids].set(sks)
+        self.sketch_age = self.sketch_age.at[client_ids].set(0.0)
+
+    def recluster(self):
+        k = fold_in_str(jax.random.fold_in(self.key, self._round), "kmeans")
+        self.clusters, _ = kmeans_cluster(
+            self.sketches, k, self.fl.num_clusters
+        )
+
+    # ---- stage 4: selection ---------------------------------------------
+    def select(self, strategy: str, model_bytes: float):
+        """Run stages 2+4 for the current round; returns a dict with the
+        participation mask and the intermediate signals (for logging)."""
+        k = jax.random.fold_in(self.key, self._round)
+        n_select = max(int(round(self.fl.select_fraction * self.fl.num_clients)), 1)
+        mask, connected, lat_pred, future = self._elect_jit(
+            self.rttg, self.clusters, jnp.asarray(model_bytes, jnp.float32), k,
+            strategy=strategy, n_select=n_select,
+        )
+        return {
+            "mask": mask,
+            "connected": connected,
+            "latency_pred": lat_pred,
+            "future_rttg": future,
+            "n_select": n_select,
+        }
+
+    def end_round(self):
+        self.sketch_age = self.sketch_age + 1.0
+        self._round += 1
+        if self._round % max(self.fl.recluster_every, 1) == 0:
+            self.recluster()

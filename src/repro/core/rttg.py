@@ -1,0 +1,63 @@
+"""Road Traffic Topology Graph: the fused, digital C-ITS snapshot.
+
+Nodes are CAVs with kinematic attributes; edges are communication-relevant
+adjacency (V2V within range, V2I attachment to the nearest RSU).  The RTTG
+is the paper's central data structure — both the latency model and the
+trajectory predictor consume it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrafficConfig
+
+V2V_RANGE_M = 300.0
+
+
+class RTTG(NamedTuple):
+    t: jax.Array  # snapshot time
+    pos: jax.Array  # (N,) fused arc position
+    speed: jax.Array  # (N,)
+    accel: jax.Array  # (N,)
+    pos_var: jax.Array  # (N,) fused position variance (fusion confidence)
+    rsu_id: jax.Array  # (N,) nearest-RSU attachment
+    rsu_dist: jax.Array  # (N,) 3D distance to the attached RSU (m)
+    load: jax.Array  # (N,) number of vehicles on the same RSU
+    adj: jax.Array  # (N,N) bool V2V adjacency
+
+
+def _ring_dist(a, b, length):
+    d = jnp.abs(a - b)
+    return jnp.minimum(d, length - d)
+
+
+def rsu_geometry(pos: jax.Array, cfg: TrafficConfig):
+    """Nearest-RSU id, 3D distance and per-RSU load for arc positions."""
+    n_rsu = max(int(cfg.ring_length_m / cfg.rsu_spacing_m), 1)
+    rsu_pos = jnp.arange(n_rsu) * cfg.rsu_spacing_m
+    d_along = _ring_dist(pos[:, None], rsu_pos[None, :], cfg.ring_length_m)
+    rid = jnp.argmin(d_along, axis=1)
+    d_min = jnp.take_along_axis(d_along, rid[:, None], axis=1)[:, 0]
+    dist3d = jnp.sqrt(d_min**2 + 15.0**2 + 5.0**2)  # lateral offset + mast height
+    load = jnp.sum(rid[:, None] == rid[None, :], axis=1).astype(jnp.float32)
+    return rid, dist3d, load
+
+
+def build_rttg(t, pos, speed, accel, pos_var, cfg: TrafficConfig) -> RTTG:
+    rid, dist3d, load = rsu_geometry(pos, cfg)
+    d = _ring_dist(pos[:, None], pos[None, :], cfg.ring_length_m)
+    adj = d < V2V_RANGE_M
+    return RTTG(
+        t=jnp.asarray(t, jnp.float32),
+        pos=pos,
+        speed=speed,
+        accel=accel,
+        pos_var=pos_var,
+        rsu_id=rid,
+        rsu_dist=dist3d,
+        load=load,
+        adj=adj,
+    )

@@ -1,0 +1,106 @@
+"""Stage 4 — client selection strategies (paper Tab. II + Fast-gamma).
+
+All five paradigms share one signature and return a boolean participation
+mask over the N clients:
+
+  greedy     : every connected client.
+  gossip     : uniform random ``n_select`` among connected.
+  data       : cluster-coverage only — round-robin random member per cluster.
+  network    : ``n_select`` lowest predicted latency among connected.
+  contextual : Fast-gamma — per data-cluster, the gamma-fraction of
+               connected members with the lowest *predicted* latency
+               (>= 1 per non-empty cluster), the paper's contribution.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+_BIG = 1e30
+
+
+def _top_k_mask(score: jax.Array, k: int) -> jax.Array:
+    """Mask of the k smallest scores (N,). Scores of +_BIG never selected."""
+    N = score.shape[0]
+    k = max(min(k, N), 0)
+    if k == 0:
+        return jnp.zeros((N,), bool)
+    _, idx = jax.lax.top_k(-score, k)
+    mask = jnp.zeros((N,), bool).at[idx].set(True)
+    return mask & (score < _BIG)
+
+
+def select_greedy(key, connected, latency_pred, clusters, n_select, gamma):
+    return connected
+
+
+def select_gossip(key, connected, latency_pred, clusters, n_select, gamma):
+    noise = jax.random.uniform(key, connected.shape)
+    score = jnp.where(connected, noise, _BIG)
+    return _top_k_mask(score, n_select)
+
+
+def select_network(key, connected, latency_pred, clusters, n_select, gamma):
+    score = jnp.where(connected, latency_pred, _BIG)
+    return _top_k_mask(score, n_select)
+
+
+def _per_cluster_rank(score: jax.Array, clusters: jax.Array) -> jax.Array:
+    """Rank of each client within its cluster by ascending score."""
+    N = score.shape[0]
+    same = clusters[:, None] == clusters[None, :]  # (N,N)
+    better = same & (
+        (score[None, :] < score[:, None])
+        | ((score[None, :] == score[:, None]) & (jnp.arange(N)[None, :] < jnp.arange(N)[:, None]))
+    )
+    return jnp.sum(better, axis=1)  # 0 = best in cluster
+
+
+def select_data(key, connected, latency_pred, clusters, n_select, gamma):
+    """Cluster coverage with random within-cluster choice (data-based)."""
+    noise = jax.random.uniform(key, connected.shape)
+    score = jnp.where(connected, noise, _BIG)
+    rank = _per_cluster_rank(score, clusters)
+    # round-robin across clusters: all rank-0 members first, then rank-1, ...
+    order_score = rank.astype(jnp.float32) * 1e6 + score
+    order_score = jnp.where(connected, order_score, _BIG)
+    return _top_k_mask(order_score, n_select)
+
+
+def select_contextual(key, connected, latency_pred, clusters, n_select, gamma):
+    """Fast-gamma: per cluster, the gamma-fraction lowest-latency clients."""
+    score = jnp.where(connected, latency_pred, _BIG)
+    rank = _per_cluster_rank(score, clusters)
+    csize = jnp.sum(
+        (clusters[:, None] == clusters[None, :]) & connected[None, :], axis=1
+    )
+    quota = jnp.maximum(jnp.ceil(gamma * csize.astype(jnp.float32)), 1.0)
+    mask = connected & (rank < quota)
+    # trim overshoot to n_select, preferring lower latency
+    order_score = rank.astype(jnp.float32) * 1e6 + jnp.where(mask, score, _BIG)
+    return _top_k_mask(jnp.where(mask, order_score, _BIG), n_select)
+
+
+STRATEGIES: Dict[str, Callable] = {
+    "greedy": select_greedy,
+    "gossip": select_gossip,
+    "data": select_data,
+    "network": select_network,
+    "contextual": select_contextual,
+}
+
+
+def select_clients(
+    strategy: str,
+    key: jax.Array,
+    connected: jax.Array,
+    latency_pred: jax.Array,
+    clusters: jax.Array,
+    n_select: int,
+    gamma: float,
+) -> jax.Array:
+    if strategy not in STRATEGIES:
+        raise KeyError(f"unknown strategy {strategy!r}; known: {sorted(STRATEGIES)}")
+    return STRATEGIES[strategy](key, connected, latency_pred, clusters, n_select, gamma)

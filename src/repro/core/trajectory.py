@@ -1,0 +1,39 @@
+"""Stage 2 — RTTG prediction (paper Fig. 2, step 2).
+
+One prediction instance per CAV estimates its trajectory over the horizon;
+the predicted trajectories rebuild a *future* RTTG which the latency model
+turns into predicted per-client communication latency.
+
+The predictor is the constant-acceleration / OU-mean kinematic model that
+matches the twin's dynamics with the noise zeroed (the best deterministic
+predictor for an OU process): accel decays as exp(-theta * t).  A learned
+GRU could slot in here; for the paper's pipeline the kinematic model is
+sufficient and fully analytic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrafficConfig
+from repro.core.rttg import RTTG, build_rttg
+
+
+def predict_rttg(rttg: RTTG, horizon_s: float, cfg: TrafficConfig) -> RTTG:
+    """Propagate the fused RTTG ``horizon_s`` seconds forward (lax.scan)."""
+    dt = cfg.sim_dt_s
+    n = max(int(round(horizon_s / dt)), 1)
+
+    def body(carry, _):
+        pos, speed, accel = carry
+        accel = accel * (1.0 - cfg.ou_theta * dt)  # OU mean reversion
+        speed = jnp.clip(speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
+        pos = jnp.mod(pos + speed * dt, cfg.ring_length_m)
+        return (pos, speed, accel), None
+
+    (pos, speed, accel), _ = jax.lax.scan(
+        body, (rttg.pos, rttg.speed, rttg.accel), None, length=n
+    )
+    # prediction inflates position variance (process noise accumulates)
+    var = rttg.pos_var + cfg.accel_std**2 * horizon_s**3 / 3.0
+    return build_rttg(rttg.t + horizon_s, pos, speed, accel, var, cfg)

@@ -1,0 +1,9 @@
+"""Data pipelines: synthetic class-conditional image sets + LM token streams."""
+from repro.data.synthetic import (
+    DATASETS,
+    make_image_dataset,
+    make_lm_batch,
+    dataset_spec,
+)
+
+__all__ = ["DATASETS", "make_image_dataset", "make_lm_batch", "dataset_spec"]

@@ -1,0 +1,14 @@
+"""Federated-learning runtime: partitioning, clients, server, simulation."""
+from repro.fl.partition import partition_clients, make_test_set
+from repro.fl.client import make_local_trainer
+from repro.fl.server import fedavg_aggregate
+from repro.fl.simulation import FLSimulation, RoundRecord
+
+__all__ = [
+    "partition_clients",
+    "make_test_set",
+    "make_local_trainer",
+    "fedavg_aggregate",
+    "FLSimulation",
+    "RoundRecord",
+]

@@ -1,0 +1,65 @@
+"""Client-side local training, vmapped over the selected cohort.
+
+TPU adaptation (DESIGN.md §3): the paper trains PyTorch clients one by one;
+here the whole cohort is one SPMD program — local SGD is a ``lax.scan`` over
+steps, ``vmap``-ed over the cohort axis, so on a pod the cohort shards over
+the ``data`` mesh axis.  De-selected cohort slots carry weight 0 and are
+masked out of the aggregate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import flatten_to_vector, tree_sub
+
+
+def make_local_trainer(
+    loss_fn: Callable,
+    lr: float,
+    epochs: int,
+    batch_size: int,
+) -> Callable:
+    """Build jit'd cohort trainer.
+
+    Returned fn: (global_params, images (K,n,...), labels (K,n), key)
+      -> (updates pytree with leading K, update_vecs (K, P_flat))
+    """
+
+    def local_sgd(params, images, labels, key):
+        n = images.shape[0]
+        spe = max(n // batch_size, 1)
+        perm_keys = jax.random.split(key, epochs)
+        idx = jax.vmap(lambda k: jax.random.permutation(k, n)[: spe * batch_size])(
+            perm_keys
+        )  # (epochs, spe*bs)
+        idx = idx.reshape(epochs * spe, batch_size)
+
+        def step(p, bidx):
+            batch = {"images": images[bidx], "labels": labels[bidx]}
+            g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(step, params, idx)
+        return params
+
+    @jax.jit
+    def train_cohort(global_params, images, labels, key):
+        K = images.shape[0]
+        keys = jax.random.split(key, K)
+        new_params = jax.vmap(lambda im, lb, k: local_sgd(global_params, im, lb, k))(
+            images, labels, keys
+        )
+        updates = jax.tree_util.tree_map(
+            lambda new, old: new - old[None], new_params, global_params
+        )
+        vecs = jax.vmap(lambda i: flatten_to_vector(
+            jax.tree_util.tree_map(lambda u: u[i], updates)
+        )[0])(jnp.arange(K))
+        return updates, vecs
+
+    return train_cohort

@@ -1,0 +1,34 @@
+"""Server-side FedAvg aggregation.
+
+``fedavg_aggregate`` applies the masked weighted average of client updates
+to the global model.  The contraction itself is ``tree_weighted_sum``
+(pure jnp) or the Pallas ``fedavg_reduce`` kernel on the flat layout —
+both validated against each other in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_weighted_sum
+
+
+@jax.jit
+def fedavg_aggregate(global_params, updates, weights):
+    """global <- global + sum_k w_k * update_k  (weights already normalized).
+
+    updates: pytree with leading cohort axis K; weights: (K,) summing to 1
+    over the *selected* clients (de-selected slots carry weight 0).
+    """
+    delta = tree_weighted_sum(updates, weights)
+    return jax.tree_util.tree_map(
+        lambda p, d: (p.astype(jnp.float32) + d.astype(jnp.float32)).astype(p.dtype),
+        global_params,
+        delta,
+    )
+
+
+def normalized_weights(mask_selected: jax.Array, n_samples: jax.Array) -> jax.Array:
+    """FedAvg weights proportional to sample counts, masked + normalized."""
+    w = mask_selected.astype(jnp.float32) * n_samples.astype(jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-9)

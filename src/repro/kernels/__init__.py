@@ -1,0 +1,32 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  pairwise_cosine — stage-3 clustering Gram matrix (MXU, 128x128 tiles)
+  fedavg_reduce   — stage-4 aggregation sweep (memory-bound, P-tiled)
+  swa_decode      — sliding-window GQA decode attention (online softmax)
+
+Each <name>.py holds the pl.pallas_call + BlockSpec geometry; ref.py holds
+the pure-jnp oracles; ops.py the backend-dispatching wrappers.
+"""
+from repro.kernels.ops import (
+    fedavg_reduce,
+    fedavg_reduce_auto,
+    pairwise_cosine,
+    pairwise_cosine_auto,
+    ssd_scan,
+    ssd_scan_auto,
+    swa_decode,
+    swa_decode_auto,
+)
+from repro.kernels import ref
+
+__all__ = [
+    "pairwise_cosine",
+    "fedavg_reduce",
+    "swa_decode",
+    "ssd_scan",
+    "ssd_scan_auto",
+    "pairwise_cosine_auto",
+    "fedavg_reduce_auto",
+    "swa_decode_auto",
+    "ref",
+]

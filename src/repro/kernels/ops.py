@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the body
+executes in Python against the same BlockSpec tiling, which is how the
+TPU-target geometry is validated offline.  On TPU backends they compile.
+``*_auto`` entry points pick the mode from the default backend; the FL
+server and clustering stages call these.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fedavg_reduce import fedavg_reduce
+from repro.kernels.pairwise_cosine import pairwise_cosine
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.swa_decode import swa_decode
+
+__all__ = [
+    "pairwise_cosine",
+    "fedavg_reduce",
+    "swa_decode",
+    "ssd_scan",
+    "pairwise_cosine_auto",
+    "fedavg_reduce_auto",
+    "swa_decode_auto",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_cosine_auto(x, **kw):
+    return pairwise_cosine(x, interpret=_interpret(), **kw)
+
+
+def fedavg_reduce_auto(updates, weights, **kw):
+    return fedavg_reduce(updates, weights, interpret=_interpret(), **kw)
+
+
+def swa_decode_auto(q, k, v, kv_pos, pos, **kw):
+    return swa_decode(q, k, v, kv_pos, pos, interpret=_interpret(), **kw)
+
+
+def ssd_scan_auto(xh, dt, A, Bs, Cs, **kw):
+    return ssd_scan(xh, dt, A, Bs, Cs, interpret=_interpret(), **kw)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: pairwise cosine similarity (stage-3 hot spot).
+
+The data-level grouping stage computes an (N, N) cosine Gram matrix over
+client update sketches — an N x D x N contraction that belongs on the MXU.
+Geometry: 128x128 output tiles (MXU-aligned), K-loop over D in 512-wide
+slabs held in VMEM; fp32 accumulation in the output tile across the K grid
+dimension.  VMEM working set per program:
+  2 * 128*512*4 B (A, B slabs) + 128*128*4 B (acc) ~= 0.6 MB  << 16 MB.
+
+Row normalization happens in the jit'd wrapper (ops.py), so the kernel is a
+pure tiled A @ A^T.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_nt_kernel(a_ref, b_ref, o_ref):
+    """o[i, j] += a[i, k] @ b[j, k]^T with K accumulated over grid dim 2."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (1,)), ((), ())),  # contract the K axis of both
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram_nt(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """x (N, D) @ y (M, D)^T -> (N, M) fp32, Pallas-tiled.
+
+    N, M must be multiples of ``block_n`` and D of ``block_k`` (the ops.py
+    wrapper pads).
+    """
+    N, D = x.shape
+    M = y.shape[0]
+    grid = (N // block_n, M // block_n, D // block_k)
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+def pairwise_cosine(
+    x: jax.Array,
+    *,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """(N, D) -> (N, N) cosine similarity via the Pallas Gram kernel."""
+    N, D = x.shape
+    xf = x.astype(jnp.float32)
+    xn = xf / jnp.maximum(jnp.linalg.norm(xf, axis=1, keepdims=True), 1e-12)
+    pn = (-N) % block_n
+    pk = (-D) % block_k
+    xp = jnp.pad(xn, ((0, pn), (0, pk)))
+    out = gram_nt(xp, xp, block_n=block_n, block_k=block_k, interpret=interpret)
+    return out[:N, :N]

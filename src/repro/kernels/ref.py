@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the semantic reference the kernels are sweep-tested
+against in tests/test_kernels.py (interpret=True on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_cosine(x: jax.Array) -> jax.Array:
+    """(N, D) -> (N, N) cosine similarity, fp32."""
+    xf = x.astype(jnp.float32)
+    n = jnp.linalg.norm(xf, axis=1, keepdims=True)
+    xn = xf / jnp.maximum(n, 1e-12)
+    return xn @ xn.T
+
+
+def fedavg_reduce(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """(K, P) x (K,) -> (P,): weighted sum over the cohort axis, fp32."""
+    return jnp.einsum(
+        "k,kp->p", weights.astype(jnp.float32), updates.astype(jnp.float32)
+    )
+
+
+def swa_decode(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k: jax.Array,  # (B, C, Hkv, D)
+    v: jax.Array,  # (B, C, Hkv, D)
+    kv_pos: jax.Array,  # (B, C) absolute positions, -1 = empty slot
+    pos: jax.Array,  # (B,) query position
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-token GQA attention over a ring-buffer KV cache; fp32 out."""
+    D = q.shape[-1]
+    scores = jnp.einsum(
+        "bhgd,bchd->bhgc", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    jk = kv_pos[:, None, None, :]
+    iq = pos[:, None, None, None]
+    mask = (jk >= 0) & (jk <= iq)
+    if window > 0:
+        mask &= (iq - jk) < window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+
+
+def ssd_naive(xh, dt, A, Bs, Cs, h0=None):
+    """Naive per-token SSD recurrence (oracle for ssd_scan kernels).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t;  y_t = C_t . h_t
+    """
+    B, S, nh, hp = xh.shape
+    ds = Bs.shape[-1]
+    h = jnp.zeros((B, nh, hp, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)  # (B, nh)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", B_t.astype(jnp.float32), dt_t, x_t.astype(jnp.float32)
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h,
+        (xh.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+         Bs.transpose(1, 0, 2), Cs.transpose(1, 0, 2)),
+    )
+    return ys.transpose(1, 0, 2, 3), h

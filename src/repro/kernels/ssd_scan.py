@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: mamba2 SSD chunked scan (SSM hot spot).
+
+TPU-native state-space duality (DESIGN.md §4): the sequential grid
+dimension iterates chunks while the (nh, hp, ds) recurrent state lives in
+VMEM scratch — the inter-chunk recurrence never round-trips HBM.  Within a
+chunk the recurrence is dense (Q x Q) masked matmuls on the MXU, one
+per-head ``fori_loop`` step:
+
+  y[q] = sum_{k<=q} C_q.B_k exp(cs_q - cs_k) dt_k x_k  (+ C_q . h_in decay)
+  h'   = exp(cs_Q) h_in + sum_k exp(cs_Q - cs_k) dt_k B_k (x) x_k
+
+Grid: (batch, n_chunks) — n_chunks iterates innermost (sequentially on
+TPU), so the scratch state carries across chunk steps of the same batch
+element.  VMEM per program (Q=128, nh=24, hp=64, ds=128):
+  x,dt,B,C blocks ~0.6 MB + state 0.8 MB + (Q,Q) work tiles ~0.2 MB.
+
+Forward-only (serving/prefill); training uses the pure-JAX ssd_scan in
+models/ssm.py (same math, autodiff-able) — both validated against the
+naive per-token recurrence oracle (ref.ssd_naive).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    a_ref,  # (1, nh) A (negative)
+    x_ref,  # (1, 1, Q, nh, hp)
+    dt_ref,  # (1, 1, Q, nh)
+    b_ref,  # (1, 1, Q, ds)
+    c_ref,  # (1, 1, Q, ds)
+    h0_ref,  # (1, nh, hp, ds) initial state
+    y_ref,  # out (1, 1, Q, nh, hp)
+    hout_ref,  # out (1, nh, hp, ds) final state (written on last chunk)
+    h_ref,  # scratch (nh, hp, ds)
+    *,
+    nh: int,
+):
+    c_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    A = a_ref[0].astype(jnp.float32)  # (nh,)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q, nh)
+    Bc = b_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Cc = c_ref[0, 0].astype(jnp.float32)  # (Q, ds)
+    Q = dt.shape[0]
+
+    cs = jnp.cumsum(dt * A[None, :], axis=0)  # (Q, nh)
+    G = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C_q . B_k
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (Q, Q), 1
+    )
+
+    def per_head(hh, _):
+        x_h = x_ref[0, 0, :, hh, :].astype(jnp.float32)  # (Q, hp)
+        cs_h = cs[:, hh]  # (Q,)
+        decay = jnp.exp(cs_h[:, None] - cs_h[None, :])  # (Q, Q)
+        M = jnp.where(tri, G * decay * dt[None, :, hh], 0.0)
+        y = jax.lax.dot_general(
+            M, x_h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (Q, hp) intra-chunk
+        # carried-state contribution: C_q . h (ds) with decay exp(cs_q)
+        h_h = h_ref[hh]  # (hp, ds)
+        ch = jax.lax.dot_general(
+            Cc, h_h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (Q, hp)
+        y = y + ch * jnp.exp(cs_h)[:, None]
+        y_ref[0, 0, :, hh, :] = y.astype(y_ref.dtype)
+        # state update: h' = exp(cs_Q) h + sum_k exp(cs_Q - cs_k) dt_k x_k (x) B_k
+        w = (jnp.exp(cs_h[Q - 1] - cs_h) * dt[:, hh])[:, None]  # (Q,1)
+        xw = x_h * w  # (Q, hp)
+        Sc = jax.lax.dot_general(
+            xw, Bc, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (hp, ds)
+        h_ref[hh] = h_h * jnp.exp(cs_h[Q - 1]) + Sc
+        return hh + 1, None
+
+    jax.lax.fori_loop(0, nh, lambda i, c: per_head(c, None)[0], 0)
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    xh: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh)  (post-softplus)
+    A: jax.Array,  # (nh,) negative
+    Bs: jax.Array,  # (B, S, ds)
+    Cs: jax.Array,  # (B, S, ds)
+    *,
+    chunk: int = 128,
+    h0: jax.Array | None = None,  # (B, nh, hp, ds)
+    interpret: bool = False,
+):
+    """Pallas SSD: returns (y (B,S,nh,hp) fp32, final state (B,nh,hp,ds))."""
+    B, S, nh, hp = xh.shape
+    ds = Bs.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hp, ds), jnp.float32)
+
+    kernel = functools.partial(_ssd_chunk_kernel, nh=nh)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, nh), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, 1, Q, nh, hp), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Q, nh), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, nh, hp, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, nh, hp), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, nh, hp, ds), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, hp, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hp, ds), jnp.float32)],
+        interpret=interpret,
+    )(
+        A.reshape(1, nh),
+        xh.reshape(B, nc, Q, nh, hp),
+        dt.reshape(B, nc, Q, nh),
+        Bs.reshape(B, nc, Q, ds),
+        Cs.reshape(B, nc, Q, ds),
+        h0,
+    )
+    y = y.reshape(B, Sp, nh, hp)[:, :S]
+    return y, hout

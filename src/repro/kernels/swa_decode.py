@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: sliding-window GQA decode attention (serving hot spot).
+
+One decode step attends a single query token against a ring-buffer KV cache
+— the long-context shapes' dominant memory sweep.  Schedule: grid
+(B, Hkv, C/block_c); each program streams one KV block through VMEM and
+maintains an online softmax (running max ``m``, normalizer ``l``, output
+accumulator ``acc``) in VMEM scratch across the C grid dimension, writing
+the normalized output on the last block.
+
+Masking (empty slot / causal / window) is positional — the ring buffer's
+absolute positions ride along as an int32 lane — so the same kernel serves
+full, windowed (mixtral/gemma2-local/hymba) and partially-filled caches.
+
+VMEM per program (block_c=512, D=128, G<=8):
+  K,V blocks 2*512*128*4 B = 0.5 MB + scratch (G*D + 2G)*4 ~ negligible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swa_decode_kernel(
+    pos_ref,  # (1, 1) current position               [SMEM-ish block]
+    q_ref,  # (1, 1, G, D)
+    k_ref,  # (1, block_c, 1, D)
+    v_ref,  # (1, block_c, 1, D)
+    kvpos_ref,  # (1, block_c)
+    o_ref,  # (1, 1, G, D)
+    m_ref,  # scratch (G, 1)
+    l_ref,  # scratch (G, 1)
+    acc_ref,  # scratch (G, D)
+    *,
+    window: int,
+    softcap: float,
+    scale: float,
+):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)  # (bc, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, bc)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    jk = kvpos_ref[0, :]  # (bc,)
+    iq = pos_ref[0, 0]
+    mask = (jk >= 0) & (jk <= iq)
+    if window > 0:
+        mask &= (iq - jk) < window
+    s = jnp.where(mask[None, :], s, -1e30)
+
+    m_prev = m_ref[...][:, 0]  # (G,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)  # (G,)
+    e = jnp.exp(s - m_new[:, None])  # (G, bc)
+    l_new = l_ref[...][:, 0] * corr + jnp.sum(e, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        e, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...][:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "block_c", "interpret")
+)
+def swa_decode(
+    q: jax.Array,  # (B, Hkv, G, D)
+    k: jax.Array,  # (B, C, Hkv, D)
+    v: jax.Array,  # (B, C, Hkv, D)
+    kv_pos: jax.Array,  # (B, C) int32, -1 = empty
+    pos: jax.Array,  # (B,) int32 query position
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token GQA ring-buffer attention -> (B, Hkv, G, D) fp32."""
+    B, Hkv, G, D = q.shape
+    C = k.shape[1]
+    bc = min(block_c, C)
+    pc = (-C) % bc
+    if pc:
+        k = jnp.pad(k, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pc), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pc)), constant_values=-1)
+    Cp = C + pc
+    grid = (B, Hkv, Cp // bc)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(
+        _swa_decode_kernel, window=window, softcap=softcap, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, 0)),  # pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),  # q
+            pl.BlockSpec((1, bc, 1, D), lambda b, h, c: (b, c, h, 0)),  # k
+            pl.BlockSpec((1, bc, 1, D), lambda b, h, c: (b, c, h, 0)),  # v
+            pl.BlockSpec((1, bc), lambda b, h, c: (b, c)),  # kv_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.reshape(B, 1).astype(jnp.int32), q, k, v, kv_pos)

@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run harness (deliverable (e)).
+
+For every (architecture x input shape x mesh) combination this lowers the
+appropriate step function (train_step / prefill / serve_step) with
+``jax.jit(...).lower(...).compile()`` on placeholder devices, proving the
+sharding config is coherent, and records
+
+  - ``compiled.memory_analysis()``  (fits per-device HBM?)
+  - ``compiled.cost_analysis()``    (FLOPs / bytes for the roofline)
+  - collective traffic parsed from the post-SPMD HLO (hlo_analysis)
+
+into one JSON artifact per combination under artifacts/dryrun/.  Artifacts
+are incremental: existing files are skipped unless --force.
+
+NOTE the XLA_FLAGS lines above MUST precede any jax import (device count
+locks at first init); smoke tests and benches never import this module.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, TrainConfig, shape_by_name
+from repro.configs import ALL_ARCH_IDS, get_config
+from repro.launch.hlo_analysis import parse_hlo, scope_trip_counts
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    TrainState,
+    cache_specs,
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    opt_state_axes,
+)
+from repro.models import build_model
+from repro.sharding import (
+    SERVE_FSDP_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    profile_rules,
+    activation_sharding,
+    split_params,
+    tree_shardings,
+)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+# long_500k needs sub-quadratic attention (DESIGN.md §4): run for SSM /
+# hybrid / native-SWA archs and the gemma2 swa-capped variant; skip pure
+# full-attention archs and whisper.
+LONG_CTX_ARCHS = {"mamba2-130m", "hymba-1.5b", "mixtral-8x7b", "gemma2-9b"}
+
+LM_ARCHS = tuple(a for a in ALL_ARCH_IDS if not a.startswith("fl-"))
+
+
+def combo_skipped(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch not in LONG_CTX_ARCHS:
+        return "long_500k needs sub-quadratic attention (DESIGN.md §4 skip table)"
+    return None
+
+
+def production_config(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if arch == "gemma2-9b" and shape_name == "long_500k":
+        from repro.configs.gemma2_9b import long_ctx_config
+
+        cfg = long_ctx_config()
+    if shape_name in ("decode_32k", "long_500k") and cfg.max_position_embeddings < shape_by_name(shape_name).seq_len + 8:
+        cfg = cfg.replace(max_position_embeddings=shape_by_name(shape_name).seq_len + 8)
+    return cfg
+
+
+def _analytic_moe_expert_flops(cfg, shape, mesh) -> float:
+    """Per-device expert SwiGLU dot FLOPs of the shard_map MoE dispatch.
+
+    Mirrors models.moe._moe_shard_map exactly: local tokens n = B*S/dp,
+    capacity C = round_up(1.25*K*n/E, 8); E >= tp -> (E/tp experts, full ff);
+    E < tp -> (E experts, ff/tp).  Train counts fwd+bwd (3x fwd dots).
+    """
+    if cfg.family != "moe":
+        return 0.0
+    sizes = dict(mesh.shape)
+    tp = sizes.get("model", 1)
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    E, K, d, ff = cfg.num_experts, cfg.experts_per_token, cfg.d_model, cfg.d_ff
+    m = max(cfg.train_microbatches, 1) if shape.mode == "train" else 1
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    if cfg.family == "vlm":
+        pass
+    n = tokens // m
+    if dp > 1 and shape.global_batch % dp == 0:
+        n //= dp
+    C = ((max(int(1.25 * K * n / E), 1) + 7) // 8) * 8
+    if E % tp == 0:
+        e_loc, ff_loc = E // tp, ff
+    else:
+        e_loc, ff_loc = E, ff // tp
+    per_layer = 2.0 * e_loc * C * 3 * d * ff_loc  # gate+up+down matmuls
+    total = per_layer * cfg.num_layers * m
+    if shape.mode == "train":
+        total *= 3.0  # fwd + grad-wrt-input + grad-wrt-weights
+    return total
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool):
+    """Lower + compile one combination; returns the result record."""
+    shape = shape_by_name(shape_name)
+    cfg = production_config(arch, shape_name)
+    api = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.mode == "train":
+        # per-arch profile: sub-1B models repurpose the model axis as extra
+        # data parallelism (§Perf iteration; serving keeps TP for KV caches)
+        rules = profile_rules(TRAIN_RULES, cfg.sharding_profile)
+    else:
+        rules = SERVE_FSDP_RULES if cfg.serve_fsdp else SERVE_RULES
+    fallback_log: list = []
+
+    params_struct_p = jax.eval_shape(api.init, jax.random.key(0))
+    params_struct, param_axes = split_params(params_struct_p)
+    param_sh = tree_shardings(param_axes, params_struct, mesh, rules, fallback_log)
+    batch_struct, batch_axes = input_specs(cfg, shape)
+    batch_sh = tree_shardings(batch_axes, batch_struct, mesh, rules, fallback_log)
+
+    t0 = time.time()
+    with mesh, activation_sharding(mesh, rules):
+        if shape.mode == "train":
+            tcfg = TrainConfig()
+            train_step, opt = make_train_step(api, tcfg)
+            opt_struct = jax.eval_shape(opt.init, params_struct)
+            opt_axes = opt_state_axes(param_axes)
+            state_struct = TrainState(params_struct, opt_struct)
+            state_axes = TrainState(param_axes, opt_axes)
+            state_sh = tree_shardings(state_axes, state_struct, mesh, rules, fallback_log)
+            jitted = jax.jit(
+                train_step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_struct, batch_struct)
+        elif shape.mode == "prefill":
+            step = make_prefill_step(api)
+            jitted = jax.jit(step, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_struct, batch_struct)
+        else:  # decode
+            step = make_decode_step(api)
+            cache_struct, cache_axes = cache_specs(api, shape)
+            cache_sh = tree_shardings(cache_axes, cache_struct, mesh, rules, fallback_log)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, batch_sh["tokens"]),
+                out_shardings=(None, cache_sh), donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_struct, cache_struct, batch_struct["tokens"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    trips = scope_trip_counts(cfg, shape)
+    stats = parse_hlo(hlo, trips)  # trip-weighted (cost_analysis counts scan bodies once)
+    moe_fix = _analytic_moe_expert_flops(cfg, shape, mesh)
+    if moe_fix:
+        # the SPMD partitioner strips op_name metadata from the shard_map
+        # expert einsums, so the scope walk misses them; the dispatch shapes
+        # are statically known — add the exact per-device expert-dot FLOPs.
+        stats.dot_flops += moe_fix
+
+    mem_rec = {}
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        mem_rec[attr] = int(getattr(mem, attr, 0) or 0)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mode": shape.mode,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "num_devices": int(mesh.devices.size),
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "dot_flops_per_device": stats.dot_flops,  # trip-weighted HLO walk
+        "hbm_bytes_per_device": stats.hbm_bytes,
+        "scope_trips": trips,
+        "collectives": stats.collectives_dict(),
+        "memory_analysis": mem_rec,
+        "sharding_fallbacks": [
+            {"axis": a, "shape": list(s), "dim": d} for a, s, d in fallback_log
+        ],
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "hlo_lines": hlo.count("\n"),
+    }
+    print(f"  memory_analysis: {mem_rec}")
+    print(f"  cost_analysis: flops/device={record['flops_per_device']:.3e} "
+          f"bytes/device={record['bytes_per_device']:.3e}")
+    print(f"  dot_flops/device(trip-weighted)={stats.dot_flops:.3e} "
+          f"hbm_bytes={stats.hbm_bytes:.3e}")
+    print(f"  collectives: {dict(stats.coll_bytes_by_kind)}")
+    return record
+
+
+def artifact_path(arch: str, shape_name: str, multi_pod: bool) -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(ARTIFACTS, mesh), exist_ok=True)
+    return os.path.join(ARTIFACTS, mesh, f"{arch}__{shape_name}.json")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -> dict | None:
+    path = artifact_path(arch, shape_name, multi_pod)
+    skip = combo_skipped(arch, shape_name)
+    label = f"{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}"
+    if skip:
+        print(f"[skip] {label}: {skip}")
+        rec = {"arch": arch, "shape": shape_name, "skipped": skip}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        return rec
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if "error" not in rec:
+            print(f"[cached] {label}")
+            return rec
+    print(f"[dryrun] {label} ...")
+    try:
+        rec = lower_combo(arch, shape_name, multi_pod)
+        print(f"[ok] {label}: compile={rec['compile_s']:.1f}s")
+    except Exception as e:  # noqa: BLE001 — record failures as artifacts
+        traceback.print_exc()
+        rec = {"arch": arch, "shape": shape_name, "error": f"{type(e).__name__}: {e}"}
+        print(f"[FAIL] {label}: {rec['error']}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *INPUT_SHAPES])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = LM_ARCHS if args.arch == "all" else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if args.shape == "all" else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,), "both": (False, True)}[args.mesh]
+
+    failures = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_one(arch, shape, multi, args.force)
+                if rec and "error" in rec:
+                    failures += 1
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Post-SPMD HLO analysis: trip-weighted FLOP / byte / collective accounting.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body once, but layers
+(and attention q-block / SSD chunk scans) execute ``trip_count`` times.
+Rather than reverse-engineering XLA's while-loop rewrites, the model code
+tags every scan body with ``jax.named_scope`` ("layer", "qscan",
+"ssd_chunk", ...) — those tags survive into the optimized HLO's
+``metadata op_name`` — and the dry-run supplies the statically-known trip
+count per tag (``scope_trips``).  Every op's contribution is multiplied by
+the product of trips of the scopes on its path.
+
+Accounted quantities (per device — the HLO is the per-device SPMD module):
+  dot_flops : 2 * prod(result dims) * contraction size, per dot op
+  hbm_bytes : result bytes of materializing top-level ops (fusion outputs,
+              dots, copies, DUS, collectives); fusion-internal ops excluded
+  collectives : result bytes per all-gather / all-reduce / reduce-scatter /
+              all-to-all / collective-permute
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_RESULT_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^\s]+)\s+([\w\-]+)\(")
+_DOT_OPERANDS_RE = re.compile(r"\sdot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+_MATERIALIZING = {
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "transpose", "scatter", "gather", "reduce",
+    "broadcast", "iota", "sort", "select-and-scatter", "pad", "concatenate",
+    *COLLECTIVES,
+    *(c + "-start" for c in COLLECTIVES),
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _dims(shape_str: str) -> list:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_counts_by_kind: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_kind.values()))
+
+    def collectives_dict(self) -> dict:
+        return {
+            "total_bytes": self.collective_bytes,
+            "bytes_by_kind": dict(self.coll_bytes_by_kind),
+            "counts_by_kind": dict(self.coll_counts_by_kind),
+        }
+
+
+def parse_hlo(hlo_text: str, scope_trips: Dict[str, float] | None = None) -> HloStats:
+    scope_trips = scope_trips or {}
+    stats = HloStats()
+    shapes: Dict[str, list] = {}
+    fusion_bodies: set = set()
+    # first pass: fusion-called computation names (their internals are not HBM)
+    for line in hlo_text.splitlines():
+        if "fusion(" in line or "to_apply=" in line:
+            for name in _CALLS_RE.findall(line):
+                fusion_bodies.add(name)
+
+    comp = "?"
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and "=" not in line.split("->")[0]:
+            comp = mc.group(1)
+            continue
+        mr = _RESULT_RE.match(line)
+        if not mr:
+            continue
+        name, type_str, opkind = mr.group(1), mr.group(2), mr.group(3)
+        dims = _dims(type_str)
+        if dims is not None:
+            shapes[name] = dims
+
+        mn = _OPNAME_RE.search(line)
+        op_name = mn.group(1) if mn else ""
+        mult = 1.0
+        for scope, trips in scope_trips.items():
+            if f"/{scope}/" in op_name or op_name.endswith(f"/{scope}"):
+                mult *= trips
+
+        if opkind == "dot":
+            mo = _DOT_OPERANDS_RE.search(line)
+            k = 1
+            if mo:
+                ldims = shapes.get(mo.group(1), [])
+                cd = _CDIMS_RE.search(line)
+                if cd and ldims:
+                    for i in cd.group(1).split(","):
+                        if i.strip():
+                            k *= ldims[int(i)]
+            n = 1
+            for d in _dims(type_str):
+                n *= d
+            stats.dot_flops += mult * 2.0 * n * k
+
+        base_kind = opkind.replace("-start", "")
+        if base_kind in COLLECTIVES and not opkind.endswith("-done"):
+            # full (possibly tuple) result type between '=' and the op kind
+            try:
+                type_part = line.split("= ", 1)[1].split(f" {opkind}(", 1)[0]
+            except IndexError:
+                type_part = type_str
+            nbytes = _shape_bytes(type_part)
+            if opkind.endswith("-start"):
+                nbytes //= 2  # (operand, result) tuple: count the payload once
+            stats.coll_bytes_by_kind[base_kind] += mult * nbytes
+            stats.coll_counts_by_kind[base_kind] += 1
+
+        if opkind in _MATERIALIZING and comp not in fusion_bodies:
+            stats.hbm_bytes += mult * _shape_bytes(type_str)
+
+    return stats
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def scope_trip_counts(cfg, shape) -> Dict[str, float]:
+    """Static trip counts for every named scan scope of (cfg, shape).
+
+    Must mirror the model code: forward_seq/lm_decode_step scan "layer"
+    macro-layers; blocked_attention scans "qscan"/"enc_qscan"/"xattn_qscan"
+    q blocks; ssd_scan scans "ssd_chunk" chunks.
+    """
+    from repro.models.transformer import pattern_period  # local: avoid cycle
+
+    S = shape.seq_len
+    trips: Dict[str, float] = {}
+    if cfg.family == "encdec":
+        trips["enc_layer"] = float(cfg.encoder_layers)
+        trips["dec_layer"] = float(cfg.num_layers)
+        senc = cfg.encoder_seq
+        bq = cfg.attn_block_q
+        if shape.mode == "decode":
+            trips["qscan"] = 1.0
+            trips["xattn_qscan"] = 1.0
+        else:
+            trips["qscan"] = float(-(-S // bq))
+            trips["xattn_qscan"] = float(-(-S // bq))
+        trips["enc_qscan"] = float(-(-senc // min(bq, senc)))
+        return trips
+
+    if cfg.family in ("cnn", "mlp"):
+        return trips
+
+    p = pattern_period(cfg)
+    trips["layer"] = float(cfg.num_layers // p)
+    if shape.mode == "decode":
+        trips["qscan"] = 1.0
+        trips["ssd_chunk"] = 1.0  # decode path has no chunk scan; harmless
+    else:
+        bq = min(cfg.attn_block_q, S)
+        trips["qscan"] = float(-(-S // bq))
+        if cfg.ssm_state:
+            q = min(cfg.ssm_chunk, S)
+            trips["ssd_chunk"] = float(-(-S // q))
+    if shape.mode == "train":
+        m = max(cfg.train_microbatches, 1)
+        if m > 1:
+            trips["microbatch"] = float(m)
+        s_mb = S  # loss chunks per microbatch slice (seq length unchanged)
+        if cfg.loss_chunk and s_mb > cfg.loss_chunk:
+            trips["loss_chunk"] = float(-(-s_mb // cfg.loss_chunk))
+    return trips

@@ -1,0 +1,21 @@
+"""Production meshes (DESIGN.md §7).
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e).  Multi-pod:
+(pod=2, data=16, model=16) = 512 chips; the ``pod`` axis extends data
+parallelism over the inter-pod link.  A function, not a module constant —
+importing this module must never touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names as single pod)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

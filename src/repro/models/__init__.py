@@ -1,0 +1,4 @@
+"""Model zoo: 10 assigned architectures + the paper's own FL models."""
+from repro.models.zoo import ModelApi, build_model
+
+__all__ = ["ModelApi", "build_model"]

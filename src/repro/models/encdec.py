@@ -1,0 +1,243 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The mel-spectrogram + conv feature extractor is the allowed stub: the model
+consumes precomputed frame embeddings ``(B, encoder_seq, d)`` (DESIGN.md §4).
+Encoder: bidirectional pre-LN blocks with GELU MLPs and sinusoidal positions
+(whisper uses learned/sinusoidal absolute embeddings, not RoPE).  Decoder:
+causal self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import Param, act_shard
+
+
+def _sinusoid(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * jnp.log(10_000.0) / d)
+    ang = pos * inv
+    out = jnp.zeros((seq, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def init_encdec(key, cfg) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "pos_embed": Param(
+            0.01 * jax.random.normal(ks[1], (cfg.max_position_embeddings, cfg.d_model), jnp.float32).astype(dtype),
+            ("seq", "embed"),
+        ),
+        "encoder": {
+            "attn": L.init_attention(ks[2], cfg, Le, dtype),
+            "mlp": L.init_gelu_mlp(ks[3], cfg.d_model, cfg.d_ff, Le, dtype),
+            "ln1": L.ones_init((Le, cfg.d_model), ("layers", "embed"), dtype),
+            "ln1b": L.zeros_init((Le, cfg.d_model), ("layers", "embed"), dtype),
+            "ln2": L.ones_init((Le, cfg.d_model), ("layers", "embed"), dtype),
+            "ln2b": L.zeros_init((Le, cfg.d_model), ("layers", "embed"), dtype),
+        },
+        "decoder": {
+            "self_attn": L.init_attention(ks[4], cfg, Ld, dtype),
+            "cross_attn": L.init_attention(ks[5], cfg, Ld, dtype, cross=True),
+            "mlp": L.init_gelu_mlp(ks[6], cfg.d_model, cfg.d_ff, Ld, dtype),
+            "ln1": L.ones_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+            "ln1b": L.zeros_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+            "lnx": L.ones_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+            "lnxb": L.zeros_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+            "ln2": L.ones_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+            "ln2b": L.zeros_init((Ld, cfg.d_model), ("layers", "embed"), dtype),
+        },
+        "final_norm": L.ones_init((cfg.d_model,), ("embed",), dtype),
+        "final_norm_b": L.zeros_init((cfg.d_model,), ("embed",), dtype),
+    }
+    return params
+
+
+def encode(params, cfg, frames):
+    """frames: stubbed embeddings (B, S_enc, d) -> encoder output."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    S = x.shape[1]
+    x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+    B = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, bp):
+      with jax.named_scope("enc_layer"):
+        h = L.layer_norm(x, bp["ln1"], bp["ln1b"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["attn"], h)
+        a = L.blocked_attention(
+            q, k, v, positions, positions, causal=False, block_q=cfg.attn_block_q,
+            scope="enc_qscan",
+        )
+        x = x + L.attn_output(bp["attn"], a)
+        h = L.layer_norm(x, bp["ln2"], bp["ln2b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(bp["mlp"], h)
+        x = act_shard(x, "batch", "seq", "embed_act")
+        return x, None
+
+    body = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat_policy != "none"
+        else body
+    )
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return x
+
+
+def _decoder_seq(params, cfg, x, enc, positions):
+    B, S, _ = x.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None, :], (B, enc.shape[1]))
+
+    def body(x, bp):
+      with jax.named_scope("dec_layer"):
+        h = L.layer_norm(x, bp["ln1"], bp["ln1b"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["self_attn"], h, cfg.kv_repeat)
+        a = L.blocked_attention(
+            q, k, v, positions, positions, causal=True, block_q=cfg.attn_block_q
+        )
+        x = x + L.attn_output(bp["self_attn"], a)
+        h = L.layer_norm(x, bp["lnx"], bp["lnxb"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["cross_attn"], h, 1, x_kv=enc)
+        a = L.blocked_attention(
+            q, k, v, positions, enc_pos, causal=False, block_q=cfg.attn_block_q,
+            scope="xattn_qscan",
+        )
+        x = x + L.attn_output(bp["cross_attn"], a)
+        h = L.layer_norm(x, bp["ln2"], bp["ln2b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(bp["mlp"], h)
+        x = act_shard(x, "batch", "seq", "embed_act")
+        return x, None
+
+    body = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat_policy != "none"
+        else body
+    )
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return x
+
+
+def _logits(params, cfg, x):
+    x = L.layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+
+
+def encdec_loss(params, cfg, batch):
+    """batch: frames (B,S_enc,d), tokens (B,S), targets (B,S)."""
+    enc = encode(params, cfg, batch["frames"])
+    tok = batch["tokens"]
+    B, S = tok.shape
+    x = jnp.take(params["embed"], tok, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = _decoder_seq(params, cfg, x, enc, positions)
+    logits = _logits(params, cfg, x)
+    mask = batch["targets"] >= 0
+    loss = L.cross_entropy_loss(logits, jnp.maximum(batch["targets"], 0), mask)
+    return loss, {"ce": loss}
+
+
+def encdec_prefill(params, cfg, batch, max_seq: int | None = None):
+    """Returns (last-token logits, decode cache incl. cross K/V).
+
+    ``max_seq`` sizes the self-attention KV budget (>= prompt length).
+    """
+    enc = encode(params, cfg, batch["frames"])
+    tok = batch["tokens"]
+    B, S = tok.shape
+    C = max(max_seq or S, S)
+    x = jnp.take(params["embed"], tok, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None, :], (B, enc.shape[1]))
+
+    def body(x, bp):
+      with jax.named_scope("dec_layer"):
+        h = L.layer_norm(x, bp["ln1"], bp["ln1b"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["self_attn"], h, cfg.kv_repeat)
+        a = L.blocked_attention(q, k, v, positions, positions, causal=True,
+                                block_q=cfg.attn_block_q)
+        x = x + L.attn_output(bp["self_attn"], a)
+        h = L.layer_norm(x, bp["lnx"], bp["lnxb"], cfg.norm_eps)
+        qx, kx, vx = L.project_qkv(bp["cross_attn"], h, 1, x_kv=enc)
+        a = L.blocked_attention(qx, kx, vx, positions, enc_pos, causal=False,
+                                block_q=cfg.attn_block_q, scope="xattn_qscan")
+        x = x + L.attn_output(bp["cross_attn"], a)
+        h = L.layer_norm(x, bp["ln2"], bp["ln2b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(bp["mlp"], h)
+        pad = C - S
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.dtype(cfg.dtype)),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.dtype(cfg.dtype)),
+            "pos": jnp.pad(
+                jnp.broadcast_to(positions, (B, S)).astype(jnp.int32),
+                ((0, 0), (0, pad)), constant_values=-1,
+            ),
+            "xk": kx.astype(jnp.dtype(cfg.dtype)),
+            "xv": vx.astype(jnp.dtype(cfg.dtype)),
+        }
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    return logits, {"pos": jnp.full((B,), S, jnp.int32), "self": caches,
+                    "enc_pos": enc_pos}
+
+
+def encdec_decode_step(params, cfg, cache, tokens):
+    """One decoder token against cached self/cross K/V.  tokens (B,)."""
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x + jnp.take(params["pos_embed"], pos, axis=0)[:, None].astype(x.dtype)
+    enc_pos = cache["enc_pos"]
+
+    def body(carry, inp):
+      with jax.named_scope("dec_layer"):
+        # caches ride in the carry and update in place (DUS) — the xs/ys
+        # form double-buffered the whole KV cache (§Perf iteration)
+        x, sc = carry
+        bp, i = inp
+        lc = jax.tree_util.tree_map(lambda a: a[i], sc)
+        h = L.layer_norm(x, bp["ln1"], bp["ln1b"], cfg.norm_eps)
+        q, k, v = L.project_qkv(bp["self_attn"], h, cfg.kv_repeat)
+        ck, cv, cp = L.cache_write(lc["k"], lc["v"], lc["pos"], k, v, pos)
+        a = L.blocked_attention(q, ck, cv, pos[:, None], cp, causal=True, block_q=1)
+        x = x + L.attn_output(bp["self_attn"], a)
+        h = L.layer_norm(x, bp["lnx"], bp["lnxb"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, bp["cross_attn"]["wq"].astype(h.dtype))
+        a = L.blocked_attention(qx, lc["xk"], lc["xv"], pos[:, None], enc_pos,
+                                causal=False, block_q=1)
+        x = x + L.attn_output(bp["cross_attn"], a)
+        h = L.layer_norm(x, bp["ln2"], bp["ln2b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(bp["mlp"], h)
+        upd = {"k": ck, "v": cv, "pos": cp}
+        sc = {
+            key: (
+                jax.lax.dynamic_update_index_in_dim(
+                    sc[key], upd[key].astype(sc[key].dtype), i, 0
+                )
+                if key in upd
+                else sc[key]
+            )
+            for key in sc
+        }
+        return (x, sc), None
+
+    Ld = cfg.num_layers
+    (x, new_self), _ = jax.lax.scan(
+        body, (x, cache["self"]), (params["decoder"], jnp.arange(Ld))
+    )
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"pos": pos + 1, "self": new_self, "enc_pos": enc_pos}

@@ -1,0 +1,332 @@
+"""Transformer primitives shared by every architecture in the zoo.
+
+Conventions
+-----------
+- Parameters are pytrees whose leaves are ``repro.sharding.Param`` (array +
+  logical axis names).  Layer stacks carry a leading ``layers`` axis and are
+  driven by ``lax.scan`` so compile time is O(1) in depth.
+- Activations are bf16 (config ``dtype``); normalization/softmax/rope run in
+  fp32.
+- Attention never materializes an (S, S) score matrix: it scans over query
+  blocks with an online softmax (flash-attention schedule in pure JAX) so the
+  32k prefill and 4k train shapes lower with bounded transients.  The Pallas
+  ``swa_decode`` kernel implements the decode-side equivalent for TPU.
+- GQA kv heads can be *repeated* ``kv_repeat``-fold after projection so the
+  KV cache exposes a head axis divisible by the model mesh axis
+  (DESIGN.md §4); weights keep the faithful kv-head count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Param
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, axes, in_axis_dims=None, dtype=jnp.float32, scale=1.0):
+    """Truncated-normal fan-in init annotated with logical axes."""
+    fan_in = in_axis_dims if in_axis_dims is not None else shape[0]
+    std = scale / math.sqrt(max(fan_in, 1))
+    w = std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Param(w.astype(dtype), axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32):
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32):
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps=1e-5, zero_centered=False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + w)
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, rope_style: str, theta: float) -> jax.Array:
+    """Inverse frequencies; '2d' (chatglm) rotates only the first half."""
+    rot = head_dim if rope_style == "full" else head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x, positions, inv_freq, rope_style: str):
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if rope_style == "none":
+        return x
+    d = x.shape[-1]
+    rot = d if rope_style == "full" else d // 2
+    xf = x.astype(jnp.float32)
+    x_rot, x_pass = xf[..., :rot], xf[..., rot:]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,rot/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated, x_pass], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (shared by every family)
+# ---------------------------------------------------------------------------
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, Hkv_eff, D)
+    v: jax.Array,
+    q_positions: jax.Array,  # (B, Sq) absolute positions of queries
+    kv_positions: jax.Array,  # (B, Skv) absolute positions of keys (-1 = empty)
+    *,
+    causal: bool,
+    window: jax.Array | int = 0,  # 0 => unlimited; may be a traced scalar
+    softcap: float = 0.0,
+    block_q: int = 1024,
+    scope: str = "qscan",  # named_scope: the HLO cost walk multiplies the
+    # q-block scan body by its trip count via this tag (hlo_analysis)
+) -> jax.Array:
+    """Flash-style attention: scan over query blocks, online softmax over keys.
+
+    Never materializes (Sq, Skv) for all heads at once — peak transient is
+    (B, H, block_q, Skv).  Works for bidirectional (causal=False) encoders,
+    causal training, windowed attention and single-token decode (Sq==1).
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    groups = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, Sq)
+    n_blocks = (Sq + block_q - 1) // block_q
+    pad = n_blocks * block_q - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)), constant_values=-1)
+
+    qb = q.reshape(B, n_blocks, block_q, H, D).transpose(1, 0, 2, 3, 4)
+    pb = q_positions.reshape(B, n_blocks, block_q).transpose(1, 0, 2)
+
+    win = jnp.asarray(window, jnp.int32)
+
+    def one_block(carry, inp):
+      with jax.named_scope(scope):
+        qblk, pblk = inp  # (B, bq, H, D), (B, bq)
+        qg = qblk.reshape(B, block_q, Hkv, groups, D)
+        # bf16 operands, fp32 accumulation (MXU-native); scale folded after.
+        scores = jnp.einsum(
+            "bqhgd,bshd->bhgqs", qg, k, preferred_element_type=jnp.float32
+        )
+        scores = scores * scale  # (B,Hkv,g,bq,Skv) fp32
+        scores = _softcap(scores, softcap)
+        iq = pblk[:, None, None, :, None]  # (B,1,1,bq,1)
+        jk = kv_positions[:, None, None, None, :]  # (B,1,1,1,Skv)
+        mask = jk >= 0  # empty cache slots
+        if causal:
+            mask &= jk <= iq
+        mask &= jnp.where(win > 0, (iq - jk) < win, True)
+        mask &= iq >= 0  # padded queries
+        scores = jnp.where(mask, scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - jax.lax.stop_gradient(m))
+        s = jnp.sum(e, axis=-1, keepdims=True)
+        p_attn = (e / jnp.maximum(s, 1e-30)).astype(v.dtype)
+        out = jnp.einsum(
+            "bhgqs,bshd->bqhgd", p_attn, v, preferred_element_type=jnp.float32
+        )
+        return carry, out.reshape(B, block_q, H, D).astype(v.dtype)
+
+    # nested remat: the q-block body recomputes its fp32 score/prob tiles in
+    # the backward pass (flash-attention-style) instead of saving them —
+    # without this, per-block (B,H,bq,Skv) fp32 tensors dominate train HBM.
+    _, outs = jax.lax.scan(
+        jax.checkpoint(one_block, policy=jax.checkpoint_policies.nothing_saveable),
+        (), (qb, pb),
+    )
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * block_q, H, D)
+    if pad:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projection + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, num_layers: int, dtype, cross: bool = False):
+    """Stacked attention params for ``num_layers`` layers."""
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    L = num_layers
+    params = {
+        "wq": dense_init(ks[0], (L, d, H, hd), ("layers", "embed", "heads", "head_dim"), d, dtype),
+        "wk": dense_init(ks[1], (L, d, KV, hd), ("layers", "embed", "kv_heads", "head_dim"), d, dtype),
+        "wv": dense_init(ks[2], (L, d, KV, hd), ("layers", "embed", "kv_heads", "head_dim"), d, dtype),
+        "wo": dense_init(ks[3], (L, H, hd, d), ("layers", "heads", "head_dim", "embed"), H * hd, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        params["bq"] = zeros_init((L, H, hd), ("layers", "heads", "head_dim"), dtype)
+        params["bk"] = zeros_init((L, KV, hd), ("layers", "kv_heads", "head_dim"), dtype)
+        params["bv"] = zeros_init((L, KV, hd), ("layers", "kv_heads", "head_dim"), dtype)
+    return params
+
+
+def project_qkv(p, x, kv_repeat: int = 1, x_kv: Optional[jax.Array] = None):
+    """q,k,v projections; k/v may come from a different stream (cross-attn).
+
+    ``kv_repeat`` repeats kv heads post-projection so the cache head axis is
+    mesh-divisible.
+    """
+    src = x if x_kv is None else x_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if kv_repeat > 1:
+        k = jnp.repeat(k, kv_repeat, axis=2)
+        v = jnp.repeat(v, kv_repeat, axis=2)
+    return q, k, v
+
+
+def attn_output(p, ctx):
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(ctx.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer for windowed layers)
+# ---------------------------------------------------------------------------
+
+
+def cache_write(cache_k, cache_v, cache_pos, k, v, positions):
+    """Write one decode step (Sq==1) into a ring-buffer KV cache.
+
+    cache_k/v: (B, C, H, D); cache_pos: (B, C) absolute positions (-1 empty).
+    positions: (B,) absolute position of the incoming token.
+    """
+    C = cache_k.shape[1]
+    slot = (positions % C).astype(jnp.int32)  # (B,)
+    b = jnp.arange(cache_k.shape[0])
+    cache_k = cache_k.at[b, slot].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b, slot].set(v[:, 0].astype(cache_v.dtype))
+    cache_pos = cache_pos.at[b, slot].set(positions.astype(jnp.int32))
+    return cache_k, cache_v, cache_pos
+
+
+def init_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "pos": ("batch", "kv_seq"),
+}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d: int, ff: int, num_layers: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    L = num_layers
+    return {
+        "w_gate": dense_init(k1, (L, d, ff), ("layers", "embed", "mlp"), d, dtype),
+        "w_up": dense_init(k2, (L, d, ff), ("layers", "embed", "mlp"), d, dtype),
+        "w_down": dense_init(k3, (L, ff, d), ("layers", "mlp", "embed"), ff, dtype),
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+def init_gelu_mlp(key, d: int, ff: int, num_layers: int, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    L = num_layers
+    return {
+        "w1": dense_init(k1, (L, d, ff), ("layers", "embed", "mlp"), d, dtype),
+        "b1": zeros_init((L, ff), ("layers", "mlp"), dtype),
+        "w2": dense_init(k2, (L, ff, d), ("layers", "mlp", "embed"), ff, dtype),
+        "b2": zeros_init((L, d), ("layers", "embed"), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype)) + p["b1"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype)) + p["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    w = 0.02 * jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+    return Param(w.astype(dtype), ("vocab", "embed"))
+
+
+def cross_entropy_loss(logits, targets, mask=None, softcap: float = 0.0):
+    """Mean token-level CE in fp32; logits (B,S,V), targets (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lf = _softcap(lf, softcap)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,191 @@
+"""Mamba2 (state-space duality) blocks, TPU-adapted.
+
+The CUDA reference implements SSD with a fused associative scan across the
+whole sequence.  The TPU-native rethink (DESIGN.md §4): split the sequence
+into chunks of ``Q`` tokens; *within* a chunk the recurrence is unrolled into
+dense (Q x Q) masked matmuls that run on the MXU; *across* chunks a
+``lax.scan`` carries the (nh, hp, ds) state.  Per-chunk transients stay
+bounded (the scan is sequential over chunks), which is what lets the 500k
+decode shape lower.
+
+Layout: n_groups = 1 (B/C shared across heads), separate projections per
+stream so every projection shards cleanly over the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, ones_init, zeros_init, rms_norm
+from repro.sharding import Param
+
+
+def init_ssm(key, cfg, num_layers: int, dtype):
+    d, di, ds, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    w = cfg.ssm_conv_width
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 8)
+    L = num_layers
+    # A initialized in [1, 16] (mamba2 default range), dt_bias ~ softplus^-1 of
+    # dt in [1e-3, 1e-1].
+    a0 = jnp.exp(
+        jax.random.uniform(ks[0], (L, nh), jnp.float32, jnp.log(1.0), jnp.log(16.0))
+    )
+    dt0 = jnp.exp(
+        jax.random.uniform(ks[1], (L, nh), jnp.float32, jnp.log(1e-3), jnp.log(1e-1))
+    )
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_z": dense_init(ks[2], (L, d, di), ("layers", "embed", "ssm_inner"), d, dtype),
+        "in_x": dense_init(ks[3], (L, d, di), ("layers", "embed", "ssm_inner"), d, dtype),
+        "in_B": dense_init(ks[4], (L, d, ds), ("layers", "embed", "ssm_state"), d, dtype),
+        "in_C": dense_init(ks[5], (L, d, ds), ("layers", "embed", "ssm_state"), d, dtype),
+        "in_dt": dense_init(ks[6], (L, d, nh), ("layers", "embed", "ssm_heads"), d, dtype),
+        "conv_w": dense_init(ks[7], (L, w, conv_dim), ("layers", "conv", None), w, dtype),
+        "conv_b": zeros_init((L, conv_dim), ("layers", None), dtype),
+        "A_log": Param(jnp.log(a0), ("layers", "ssm_heads")),
+        "dt_bias": Param(dt_bias, ("layers", "ssm_heads")),
+        "D": ones_init((L, nh), ("layers", "ssm_heads"), jnp.float32),
+        "norm_w": ones_init((L, di), ("layers", "ssm_inner"), dtype),
+        "out_proj": dense_init(ks[0], (L, di, d), ("layers", "ssm_inner", "embed"), di, dtype),
+    }
+
+
+def init_ssm_state(batch: int, cfg, dtype):
+    nh, hp, ds = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, nh, hp, ds), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+SSM_STATE_AXES = {
+    "h": ("batch", "ssm_heads", None, "ssm_state"),
+    "conv": ("batch", "conv", None),
+}
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv; xbc (B,S,C), w (width,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_scan(xh, dt, A, Bs, Cs, chunk: int, h0=None):
+    """Chunked SSD.
+
+    xh: (B,S,nh,hp)  dt: (B,S,nh)  A: (nh,) negative
+    Bs, Cs: (B,S,ds)  -> y (B,S,nh,hp), final state (B,nh,hp,ds)
+    """
+    Bsz, S, nh, hp = xh.shape
+    ds = Bs.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    def rs(t, trailing):
+        return t.reshape((Bsz, nc, Q) + trailing).transpose((1, 0, 2) + tuple(range(3, 3 + len(trailing))))
+
+    xc = rs(xh, (nh, hp))  # (nc,B,Q,nh,hp)
+    dtc = rs(dt.astype(jnp.float32), (nh,))
+    Bc = rs(Bs, (ds,))
+    Cc = rs(Cs, (ds,))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hp, ds), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+
+    def one_chunk(h, inp):
+      with jax.named_scope("ssd_chunk"):
+        x_c, dt_c, B_c, C_c = inp  # (B,Q,nh,hp) (B,Q,nh) (B,Q,ds) (B,Q,ds)
+        dA = dt_c * A  # (B,Q,nh)
+        cs = jnp.cumsum(dA, axis=1)  # inclusive
+        # ---- intra-chunk (MXU) ----
+        G = jnp.einsum("bqn,bkn->bqk", C_c, B_c, preferred_element_type=jnp.float32)
+        decay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,Q,Q,nh)
+        M = G[..., None] * decay * dt_c[:, None, :, :]
+        M = jnp.where(tri[None, :, :, None], M, 0.0)
+        y = jnp.einsum("bqkh,bkhp->bqhp", M, x_c.astype(jnp.float32))
+        # ---- contribution of the carried state ----
+        y += jnp.einsum("bqn,bhpn,bqh->bqhp", C_c.astype(jnp.float32), h, jnp.exp(cs))
+        # ---- state update ----
+        sdecay = jnp.exp(cs[:, -1:, :] - cs) * dt_c  # (B,Q,nh)
+        Sc = jnp.einsum(
+            "bkn,bkh,bkhp->bhpn", B_c.astype(jnp.float32), sdecay, x_c.astype(jnp.float32)
+        )
+        h_new = jnp.exp(cs[:, -1, :])[:, :, None, None] * h + Sc
+        return h_new, y.astype(xh.dtype)
+
+    # nested remat: recompute the (B,Q,Q,nh) intra-chunk decay/M tensors in
+    # the backward pass rather than saving them per chunk.
+    h_final, ys = jax.lax.scan(
+        jax.checkpoint(one_chunk, policy=jax.checkpoint_policies.nothing_saveable),
+        h0, (xc, dtc, Bc, Cc),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, nh, hp)
+    return y[:, :S], h_final
+
+
+def ssm_forward(p, x, cfg, state=None, decode: bool = False):
+    """One mamba2 mixer; p is a single layer's slice.
+
+    Sequence mode: x (B,S,d) -> (y, new_state).
+    Decode mode:   x (B,1,d) + state -> (y (B,1,d), new_state).
+    """
+    di, ds, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(x.dtype))
+    xc = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(x.dtype))
+    Bc = jnp.einsum("bsd,dn->bsn", x, p["in_B"].astype(x.dtype))
+    Cc = jnp.einsum("bsd,dn->bsn", x, p["in_C"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])  # (nh,)
+
+    xbc = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    w, b = p["conv_w"], p["conv_b"]
+
+    if decode:
+        assert state is not None
+        conv_in = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, width, C)
+        new_conv = conv_in[:, 1:, :]
+        width = w.shape[0]
+        out = sum(conv_in[:, i, :] * w[i][None, :] for i in range(width)) + b[None, :]
+        xbc_t = jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)  # (B, C)
+        xs, Bss, Css = jnp.split(xbc_t, [di, di + ds], axis=-1)
+        xhh = xs.reshape(-1, nh, hp).astype(jnp.float32)
+        dt1 = dt[:, 0]  # (B,nh)
+        dA = jnp.exp(dt1 * A)  # (B,nh)
+        h = state["h"] * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", Bss.astype(jnp.float32), dt1, xhh
+        )
+        y = jnp.einsum("bhpn,bn->bhp", h, Css.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xhh
+        y = y.reshape(-1, 1, di).astype(x.dtype)
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        xbc_t = _causal_conv(xbc, w, b)
+        xs, Bss, Css = jnp.split(xbc_t, [di, di + ds], axis=-1)
+        xhh = xs.reshape(x.shape[0], -1, nh, hp)
+        h0 = state["h"] if state is not None else None
+        y, h = ssd_scan(xhh, dt, A, Bss, Css, cfg.ssm_chunk, h0)
+        y = y.astype(jnp.float32) + p["D"][None, None, :, None] * xhh.astype(jnp.float32)
+        y = y.reshape(x.shape[0], -1, di).astype(x.dtype)
+        width = w.shape[0]
+        tail = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))[:, -(width - 1):, :]
+        new_state = {"h": h, "conv": tail}
+
+    gated = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = rms_norm(gated.astype(x.dtype), p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", out, p["out_proj"].astype(x.dtype)), new_state

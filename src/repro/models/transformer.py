@@ -1,0 +1,475 @@
+"""Decoder-only LM engine: dense / MoE / SSM / hybrid / VLM families.
+
+One code path serves all families; a *block* is assembled from the config:
+
+  dense   : ln -> GQA attn -> res -> ln -> SwiGLU -> res
+  moe     : ln -> GQA attn -> res -> ln -> MoE FFN -> res
+  ssm     : ln -> mamba2 mixer -> res                       (no attn, no MLP)
+  hybrid  : ln -> (GQA attn || mamba2) averaged -> res -> ln -> SwiGLU -> res
+  vlm     : dense blocks; stubbed image patch embeddings are concatenated in
+            front of the token embeddings (DESIGN.md §4).
+
+Layers are stacked with a leading ``layers`` axis and driven by ``lax.scan``
+over *macro-layers* of ``len(layer_pattern)`` sub-layers (gemma2's
+local/global alternation scans over pairs), so every sub-layer's attention
+kind — and therefore its KV-cache geometry — is static.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import (
+    SSM_STATE_AXES,
+    init_ssm,
+    init_ssm_state,
+    ssm_forward,
+)
+from repro.sharding import Param, act_shard
+
+
+# ---------------------------------------------------------------------------
+# pattern helpers
+# ---------------------------------------------------------------------------
+
+
+def pattern_period(cfg) -> int:
+    return max(len(cfg.layer_pattern), 1)
+
+
+def pattern_kinds(cfg) -> tuple[str, ...]:
+    p = pattern_period(cfg)
+    return tuple(cfg.layer_kind(i) for i in range(p))
+
+
+def kind_window(cfg, kind: str, long_ctx_cap: int = 0) -> int:
+    """Static attention window for a sub-layer kind (0 = unlimited)."""
+    if kind == "full":
+        return 0
+    if kind == "global":
+        # gemma2 long-context variant: global layers window-capped (DESIGN §4)
+        return long_ctx_cap
+    return cfg.sliding_window
+
+
+def cache_len_for(cfg, kind: str, seq_len: int) -> int:
+    w = kind_window(cfg, kind, long_ctx_cap=0)
+    if kind == "global" and cfg.variant == "swa-capped":
+        w = 32_768
+    return min(seq_len, w) if w else seq_len
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _has_attn(cfg) -> bool:
+    return cfg.family in ("dense", "moe", "vlm", "hybrid")
+
+
+def _has_ssm(cfg) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def _ffn_kind(cfg) -> Optional[str]:
+    if cfg.family == "moe":
+        return "moe"
+    if cfg.family in ("dense", "vlm", "hybrid"):
+        return "swiglu"
+    return None  # ssm: no FFN (mamba2 mixer only)
+
+
+def init_lm(key, cfg) -> dict:
+    """Parameter tree (leaves are ``Param``) for a decoder-only LM."""
+    p = pattern_period(cfg)
+    if cfg.num_layers % p:
+        raise ValueError(f"{cfg.name}: num_layers {cfg.num_layers} % pattern {p} != 0")
+    Lp = cfg.num_layers // p
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 3 + p)
+
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": L.ones_init((cfg.d_model,), ("embed",), dtype),
+        "blocks": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            keys[1], (cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), cfg.d_model, dtype
+        )
+    for i in range(p):
+        bk = jax.random.split(keys[3 + i], 4)
+        block: dict[str, Any] = {
+            "ln1": L.ones_init((Lp, cfg.d_model), ("layers", "embed"), dtype),
+        }
+        if _has_attn(cfg):
+            block["attn"] = L.init_attention(bk[0], cfg, Lp, dtype)
+        if _has_ssm(cfg):
+            block["ssm"] = init_ssm(bk[1], cfg, Lp, dtype)
+            if cfg.family == "hybrid":
+                block["attn_out_norm"] = L.ones_init((Lp, cfg.d_model), ("layers", "embed"), dtype)
+                block["ssm_out_norm"] = L.ones_init((Lp, cfg.d_model), ("layers", "embed"), dtype)
+        ffn = _ffn_kind(cfg)
+        if ffn == "moe":
+            block["moe"] = init_moe(bk[2], cfg, Lp, dtype)
+            block["ln2"] = L.ones_init((Lp, cfg.d_model), ("layers", "embed"), dtype)
+        elif ffn == "swiglu":
+            block["mlp"] = L.init_swiglu(bk[2], cfg.d_model, cfg.d_ff, Lp, dtype)
+            block["ln2"] = L.ones_init((Lp, cfg.d_model), ("layers", "embed"), dtype)
+        params["blocks"].append(block)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_lm_cache(cfg, batch: int, seq_len: int, prefilled: int = 0) -> dict:
+    """Decode-state pytree.  ``prefilled`` marks positions [0, prefilled) as
+    already written (the dry-run decodes with a full context)."""
+    p = pattern_period(cfg)
+    kinds = pattern_kinds(cfg)
+    Lp = cfg.num_layers // p
+    dtype = jnp.dtype(cfg.dtype)
+    kv_eff = cfg.num_kv_heads * cfg.kv_repeat
+    hd = cfg.resolved_head_dim
+    layers_cache = []
+    for i in range(p):
+        entry: dict[str, Any] = {}
+        if _has_attn(cfg):
+            C = cache_len_for(cfg, kinds[i], seq_len)
+            k = jnp.zeros((Lp, batch, C, kv_eff, hd), dtype)
+            pos = jnp.full((Lp, batch, C), -1, jnp.int32)
+            if prefilled:
+                # ring-buffer contents for a context of length ``prefilled``:
+                # positions p in [0, prefilled) live at slot p % C; each slot
+                # holds the latest such position.
+                slots = jnp.arange(C)
+                base = (prefilled - 1) // C * C
+                cand = base + slots
+                cand = jnp.where(cand >= prefilled, cand - C, cand)
+                cand = jnp.where(cand < 0, -1, cand)
+                pos = jnp.broadcast_to(cand[None, None, :], (Lp, batch, C)).astype(jnp.int32)
+            entry["attn"] = {"k": k, "v": jnp.zeros_like(k), "pos": pos}
+        if _has_ssm(cfg):
+            st = init_ssm_state(batch, cfg, dtype)
+            entry["ssm"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (Lp,) + a.shape).copy(), st
+            )
+        layers_cache.append(entry)
+    return {
+        "pos": jnp.full((batch,), prefilled, jnp.int32),
+        "layers": layers_cache,
+    }
+
+
+def lm_cache_axes(cfg) -> dict:
+    """Logical axes matching ``init_lm_cache`` (for shardings)."""
+    p = pattern_period(cfg)
+    layers_axes = []
+    for _ in range(p):
+        entry: dict[str, Any] = {}
+        if _has_attn(cfg):
+            entry["attn"] = {
+                "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                "pos": ("layers", "batch", "kv_seq"),
+            }
+        if _has_ssm(cfg):
+            entry["ssm"] = {
+                k: ("layers",) + v for k, v in SSM_STATE_AXES.items()
+            }
+        layers_axes.append(entry)
+    return {"pos": ("batch",), "layers": layers_axes}
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_seq(cfg, bp, x, positions, inv_freq, window: int, cache_len: int):
+    """Sequence-mode attention; returns (out, cache_entry)."""
+    q, k, v = L.project_qkv(bp, x, cfg.kv_repeat)
+    q = L.apply_rope(q, positions, inv_freq, cfg.rope_style)
+    k = L.apply_rope(k, positions, inv_freq, cfg.rope_style)
+    out = L.blocked_attention(
+        q, k, v, positions, positions,
+        causal=True, window=window, softcap=cfg.attn_logit_softcap,
+        block_q=cfg.attn_block_q,
+    )
+    out = L.attn_output(bp, out)
+    B, S = x.shape[0], x.shape[1]
+    C = cache_len
+    # fill a ring buffer of C slots with the last min(C, S) positions
+    # (slot = pos % C); C may exceed S when a longer decode budget follows.
+    T = min(C, S)
+    ktail, vtail = k[:, S - T:], v[:, S - T:]
+    ptail = jnp.broadcast_to(positions[..., S - T:], (B, T))
+    slots = (ptail[0] % C).astype(jnp.int32)
+    shape = (B, C) + k.shape[2:]
+    ck = jnp.zeros(shape, k.dtype).at[:, slots].set(ktail)
+    cv = jnp.zeros(shape, v.dtype).at[:, slots].set(vtail)
+    cp = jnp.full((B, C), -1, jnp.int32).at[:, slots].set(ptail)
+    return out, {"k": ck, "v": cv, "pos": cp}
+
+
+def _attn_decode(cfg, bp, x, pos, inv_freq, window: int, cache):
+    """Single-token attention against a ring-buffer cache."""
+    q, k, v = L.project_qkv(bp, x, cfg.kv_repeat)
+    q = L.apply_rope(q, pos[:, None], inv_freq, cfg.rope_style)
+    k = L.apply_rope(k, pos[:, None], inv_freq, cfg.rope_style)
+    ck, cv, cp = L.cache_write(cache["k"], cache["v"], cache["pos"], k, v, pos)
+    out = L.blocked_attention(
+        q, ck, cv, pos[:, None], cp,
+        causal=True, window=window, softcap=cfg.attn_logit_softcap,
+        block_q=1,
+    )
+    out = L.attn_output(bp, out)
+    return out, {"k": ck, "v": cv, "pos": cp}
+
+
+def apply_block(cfg, kind: str, bp, x, positions, inv_freq, mode: str,
+                cache=None, seq_len_hint: int = 0):
+    """One sub-layer.  Returns (x, new_cache_entry, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+    window = kind_window(
+        cfg, kind, long_ctx_cap=32_768 if cfg.variant == "swa-capped" else 0
+    )
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps, cfg.zero_centered_norm)
+
+    if cfg.family == "ssm":
+        y, st = ssm_forward(bp["ssm"], h, cfg,
+                            state=None if mode != "decode" else cache["ssm"],
+                            decode=mode == "decode")
+        if mode != "train":
+            new_cache["ssm"] = st
+        x = x + y
+        return x, new_cache, aux
+
+    if cfg.family == "hybrid":
+        if mode == "decode":
+            a, ac = _attn_decode(cfg, bp["attn"], h, positions, inv_freq, window, cache["attn"])
+        else:
+            C = cache_len_for(cfg, kind, seq_len_hint or h.shape[1])
+            a, ac = _attn_seq(cfg, bp["attn"], h, positions, inv_freq, window, C)
+        s, st = ssm_forward(bp["ssm"], h, cfg,
+                            state=None if mode != "decode" else cache["ssm"],
+                            decode=mode == "decode")
+        a = L.rms_norm(a, bp["attn_out_norm"], cfg.norm_eps)
+        s = L.rms_norm(s, bp["ssm_out_norm"], cfg.norm_eps)
+        x = x + 0.5 * (a + s)
+        if mode != "train":
+            new_cache["attn"] = ac
+            new_cache["ssm"] = st
+    else:  # dense / moe / vlm
+        if mode == "decode":
+            a, ac = _attn_decode(cfg, bp["attn"], h, positions, inv_freq, window, cache["attn"])
+        else:
+            C = cache_len_for(cfg, kind, seq_len_hint or h.shape[1])
+            a, ac = _attn_seq(cfg, bp["attn"], h, positions, inv_freq, window, C)
+        x = x + a
+        if mode != "train":
+            new_cache["attn"] = ac
+
+    if "ln2" in bp:
+        h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps, cfg.zero_centered_norm)
+        if "moe" in bp:
+            y, aux = moe_ffn(bp["moe"], h2, cfg)
+        else:
+            y = L.swiglu(bp["mlp"], h2)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "minimal":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat_policy == "dots":
+        # save matmul outputs: no forward recompute in the backward pass, so
+        # ZeRO-3 weight all-gathers happen once ("dp"-profile small models)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _assemble_input(params, cfg, batch):
+    """Token embeddings, with stubbed image patches prepended for VLMs."""
+    x = _embed_tokens(params, cfg, batch["tokens"])
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)  # (B, n_img, d)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+
+
+def _chunked_ce(params, cfg, x, targets, chunk: int):
+    """CE over sequence chunks: the fp32 (B,S,V) logits tensor is never
+    materialized — each chunk's logits live only inside a rematerialized
+    scan body (chunk x V at a time).  Returns (mean nll, token count)."""
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    B, S, d = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // chunk
+    xs = x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        with jax.named_scope("loss_chunk"):
+            s_nll, s_cnt = carry
+            xb, tb = inp
+            logits = jnp.einsum("bsd,dv->bsv", xb, head.astype(xb.dtype))
+            lf = L._softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+            logz = jax.scipy.special.logsumexp(lf, axis=-1)
+            gold = jnp.take_along_axis(lf, jnp.maximum(tb, 0)[..., None], axis=-1)[..., 0]
+            m = (tb >= 0).astype(jnp.float32)
+            return (s_nll + jnp.sum((logz - gold) * m), s_cnt + jnp.sum(m)), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (s_nll, s_cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xs, ts)
+    )
+    return s_nll / jnp.maximum(s_cnt, 1.0)
+
+
+def forward_seq(params, cfg, x, positions, mode: str, max_seq: int | None = None):
+    """Run all layers in sequence mode.  Returns (x, caches, aux)."""
+    p = pattern_period(cfg)
+    kinds = pattern_kinds(cfg)
+    inv_freq = L.rope_frequencies(cfg.resolved_head_dim, cfg.rope_style, cfg.rope_theta)
+    S = max_seq or x.shape[1]
+
+    def macro(carry, slices):
+      with jax.named_scope("layer"):
+        x, aux = carry
+        new_caches = []
+        for i in range(p):
+            x, nc, a = apply_block(
+                cfg, kinds[i], slices[i], x, positions, inv_freq, mode,
+                seq_len_hint=S,
+            )
+            new_caches.append(nc)
+            aux = aux + a
+        x = act_shard(x, "batch", "seq", "embed_act")
+        return (x, aux), tuple(new_caches) if mode != "train" else None
+
+    body = _remat(cfg, macro)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), tuple(params["blocks"])
+    )
+    return x, caches, aux
+
+
+def lm_loss(params, cfg, batch):
+    """Training objective; batch: tokens (B,S), targets (B,S) [, image_embeds]."""
+    x = _assemble_input(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, _, aux = forward_seq(params, cfg, x, positions, "train")
+    targets = batch["targets"]
+    if cfg.family == "vlm":  # no loss on image positions
+        n_img = cfg.num_image_tokens
+        pad = jnp.full((B, n_img), -1, targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    if cfg.loss_chunk and S > cfg.loss_chunk:
+        loss = _chunked_ce(params, cfg, x, targets, cfg.loss_chunk)
+    else:
+        logits = _logits(params, cfg, x)
+        mask = targets >= 0
+        loss = L.cross_entropy_loss(
+            logits, jnp.maximum(targets, 0), mask, cfg.final_logit_softcap
+        )
+    return loss + cfg.router_aux_loss * aux, {"ce": loss, "aux": aux}
+
+
+def lm_prefill(params, cfg, batch, max_seq: int | None = None):
+    """Full-context forward; returns (last-token logits, decode cache).
+
+    ``max_seq`` sizes the decode KV budget (>= prompt length); default S.
+    """
+    x = _assemble_input(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, caches, _ = forward_seq(params, cfg, x, positions, "prefill",
+                               max_seq=max_seq or S)
+    logits = _logits(params, cfg, x[:, -1:, :])[:, 0]
+    cache = {
+        "pos": jnp.full((B,), S, jnp.int32),
+        "layers": list(caches),
+    }
+    return logits, cache
+
+
+def lm_decode_step(params, cfg, cache, tokens):
+    """One decode step.  tokens (B,) -> (logits (B,V), new cache).
+
+    The stacked caches ride in the scan CARRY and are updated with
+    dynamic-update-slice at the layer index: XLA keeps the carry in place
+    (one buffer, aliased with the donated input) instead of the xs/ys
+    double-buffer a scan-over-cache-slices would allocate — that copy was
+    the dominant decode-shape HBM term (§Perf iteration).
+    """
+    p = pattern_period(cfg)
+    kinds = pattern_kinds(cfg)
+    inv_freq = L.rope_frequencies(cfg.resolved_head_dim, cfg.rope_style, cfg.rope_theta)
+    pos = cache["pos"]  # (B,)
+    x = _embed_tokens(params, cfg, tokens[:, None])
+
+    def macro(carry, inp):
+      with jax.named_scope("layer"):
+        x, caches = carry
+        slices, i = inp
+        caches = list(caches)
+        for pi in range(p):
+            lc = jax.tree_util.tree_map(lambda a: a[i], caches[pi])
+            x, nc, _ = apply_block(
+                cfg, kinds[pi], slices[pi], x, pos, inv_freq, "decode", cache=lc
+            )
+            caches[pi] = jax.tree_util.tree_map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), i, 0
+                ),
+                caches[pi], nc,
+            )
+        return (x, tuple(caches)), None
+
+    Lp = cfg.num_layers // p
+    (x, new_caches), _ = jax.lax.scan(
+        macro,
+        (x, tuple(cache["layers"])),
+        (tuple(params["blocks"]), jnp.arange(Lp)),
+    )
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, {"pos": pos + 1, "layers": list(new_caches)}

@@ -1,0 +1,105 @@
+"""Model zoo dispatcher: one uniform API over every family.
+
+``build_model(cfg)`` returns a ``ModelApi`` with
+
+  init(key)                  -> Param tree (values + logical axes)
+  loss(params, batch)        -> (scalar, metrics)      [train step objective]
+  prefill(params, batch)     -> (logits, cache)        [LM families]
+  decode_step(params, cache, tokens) -> (logits, cache)
+  init_cache(batch, seq_len, prefilled) -> cache pytree
+  cache_axes()               -> logical axes for the cache pytree
+
+The FL runtime, launchers and dry-run all consume this interface only.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import cnn as _cnn
+from repro.models import encdec as _encdec
+from repro.models import transformer as _tf
+from repro.models.layers import CACHE_AXES
+from repro.models.ssm import SSM_STATE_AXES
+
+
+class ModelApi(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Optional[Callable]
+    decode_step: Optional[Callable]
+    init_cache: Optional[Callable]
+    cache_axes: Optional[Callable]
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("cnn", "mlp"):
+        return ModelApi(
+            cfg,
+            init=lambda key: _cnn.init_cnn(key, cfg),
+            loss=lambda p, b: _cnn.cnn_loss(p, cfg, b),
+            prefill=None,
+            decode_step=None,
+            init_cache=None,
+            cache_axes=None,
+        )
+    if cfg.family == "encdec":
+        return ModelApi(
+            cfg,
+            init=lambda key: _encdec.init_encdec(key, cfg),
+            loss=lambda p, b: _encdec.encdec_loss(p, cfg, b),
+            prefill=lambda p, b, max_seq=None: _encdec.encdec_prefill(p, cfg, b, max_seq),
+            decode_step=lambda p, c, t: _encdec.encdec_decode_step(p, cfg, c, t),
+            init_cache=lambda batch, seq, prefilled=0: _encdec_cache(cfg, batch, seq, prefilled),
+            cache_axes=lambda: _encdec_cache_axes(cfg),
+        )
+    # decoder-only LM families (dense/moe/ssm/hybrid/vlm)
+    return ModelApi(
+        cfg,
+        init=lambda key: _tf.init_lm(key, cfg),
+        loss=lambda p, b: _tf.lm_loss(p, cfg, b),
+        prefill=lambda p, b, max_seq=None: _tf.lm_prefill(p, cfg, b, max_seq),
+        decode_step=lambda p, c, t: _tf.lm_decode_step(p, cfg, c, t),
+        init_cache=lambda batch, seq, prefilled=0: _tf.init_lm_cache(cfg, batch, seq, prefilled),
+        cache_axes=lambda: _tf.lm_cache_axes(cfg),
+    )
+
+
+def _encdec_cache(cfg, batch: int, seq_len: int, prefilled: int = 0):
+    dtype = jnp.dtype(cfg.dtype)
+    kv_eff = cfg.num_kv_heads * cfg.kv_repeat
+    hd = cfg.resolved_head_dim
+    Ld = cfg.num_layers
+    k = jnp.zeros((Ld, batch, seq_len, kv_eff, hd), dtype)
+    pos = jnp.full((Ld, batch, seq_len), -1, jnp.int32)
+    if prefilled:
+        slots = jnp.arange(seq_len)
+        cand = jnp.where(slots < prefilled, slots, -1)
+        pos = jnp.broadcast_to(cand[None, None, :], pos.shape).astype(jnp.int32)
+    enc_pos = jnp.broadcast_to(
+        jnp.arange(cfg.encoder_seq)[None, :], (batch, cfg.encoder_seq)
+    ).astype(jnp.int32)
+    return {
+        "pos": jnp.full((batch,), prefilled, jnp.int32),
+        "self": {
+            "k": k,
+            "v": jnp.zeros_like(k),
+            "pos": pos,
+            "xk": jnp.zeros((Ld, batch, cfg.encoder_seq, kv_eff, hd), dtype),
+            "xv": jnp.zeros((Ld, batch, cfg.encoder_seq, kv_eff, hd), dtype),
+        },
+        "enc_pos": enc_pos,
+    }
+
+
+def _encdec_cache_axes(cfg):
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return {
+        "pos": ("batch",),
+        "self": {"k": kv, "v": kv, "pos": ("layers", "batch", "kv_seq"),
+                 "xk": kv, "xv": kv},
+        "enc_pos": ("batch", "kv_seq"),
+    }

@@ -1,0 +1,11 @@
+"""Optimizers (pure-pytree, optax-free since the container is offline)."""
+from repro.optim.optimizers import (
+    OptState,
+    make_optimizer,
+    sgd,
+    momentum,
+    adamw,
+    clip_by_global_norm,
+)
+
+__all__ = ["OptState", "make_optimizer", "sgd", "momentum", "adamw", "clip_by_global_norm"]

@@ -1,0 +1,119 @@
+"""Minimal production optimizer set: SGD, momentum, AdamW.
+
+Each optimizer is an (init, update) pair operating on parameter pytrees.
+AdamW keeps fp32 moments regardless of the parameter dtype (mixed-precision
+training keeps bf16 params + fp32 optimizer state, the standard TPU recipe).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.utils import tree_global_norm
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree  # first moment (or momentum buffer); zeros pytree for sgd
+    nu: PyTree  # second moment; zeros pytree when unused
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], Tuple[PyTree, OptState]]
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def _zeros_f32(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), z, z)
+
+    def update(grads, state, params):
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new, OptState(state.step + 1, state.mu, state.nu)
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        z = _zeros_f32(params)
+        zero_nu = jax.tree_util.tree_map(lambda p: jnp.zeros((), jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), z, zero_nu)
+
+    def update(grads, state, params):
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state.mu, grads
+        )
+        new = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu
+        )
+        return new, OptState(state.step + 1, mu, state.nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    beta1: float = 0.9,
+    beta2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_f32(params), _zeros_f32(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - beta1**t
+        bc2 = 1.0 - beta2**t
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta1 * m + (1 - beta1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: beta2 * v + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+
+        def _apply(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            upd = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(_apply, params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.learning_rate, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+    if cfg.optimizer == "momentum":
+        return momentum(cfg.learning_rate, cfg.beta1)
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.learning_rate)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

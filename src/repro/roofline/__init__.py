@@ -1,0 +1,10 @@
+"""Roofline analysis from dry-run artifacts (deliverable (g))."""
+from repro.roofline.analysis import (
+    HW,
+    RooflineRow,
+    analyze_record,
+    load_artifacts,
+    render_table,
+)
+
+__all__ = ["HW", "RooflineRow", "analyze_record", "load_artifacts", "render_table"]

@@ -1,0 +1,143 @@
+"""Three-term roofline from the compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+
+  compute term    = HLO_dot_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_HBM_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_link_bw
+
+All three numerators are per-device quantities from the SPMD module (the
+partitioner emits the per-device program), trip-weighted by the named-scope
+walk in hlo_analysis.  MODEL_FLOPS uses the closed-form 6·N·D (train) /
+2·N·D (prefill) / 2·N_active·B (decode) and the ratio
+MODEL_FLOPS / (devices * HLO_FLOPs) measures how much compiled compute is
+"useful" — remat, kv-repetition and dispatch overheads push it below 1.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.config import INPUT_SHAPES
+
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip (TPU v5e)
+    "hbm_bw": 819e9,  # bytes/s
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    fits_hbm: bool
+    note: str
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops_for(record: dict) -> float:
+    """Closed-form useful FLOPs for the whole step (all devices)."""
+    shape = INPUT_SHAPES[record["shape"]]
+    n_active = record.get("active_params", record["params"])
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+_NOTES = {
+    "compute": (
+        "compute-bound: raise MXU utilization (larger per-device tile, fewer "
+        "remat replays) or shrink redundant FLOPs (kv-repeat, dispatch)"
+    ),
+    "memory": (
+        "HBM-bound: cut activation/KV traffic (better fusion, bf16 cache, "
+        "wider per-device batch to amortize weight sweeps)"
+    ),
+    "collective": (
+        "collective-bound: re-shard to cheaper collectives (less TP for small "
+        "models, reduce-scatter instead of all-reduce, overlap with compute)"
+    ),
+}
+
+
+def analyze_record(record: dict) -> Optional[RooflineRow]:
+    if "error" in record or "skipped" in record:
+        return None
+    n_dev = record["num_devices"]
+    flops_dev = record.get("dot_flops_per_device", 0.0)
+    bytes_dev = record.get("hbm_bytes_per_device", 0.0)
+    coll_dev = record.get("collectives", {}).get("total_bytes", 0.0)
+
+    compute_s = flops_dev / HW["peak_flops"]
+    memory_s = bytes_dev / HW["hbm_bw"]
+    collective_s = coll_dev / HW["ici_bw"]
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops_for(record)
+    hlo_global = flops_dev * n_dev
+    mem = record.get("memory_analysis", {})
+    per_dev_bytes = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+    return RooflineRow(
+        arch=record["arch"],
+        shape=record["shape"],
+        mesh=record["mesh"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        fits_hbm=per_dev_bytes < 16e9,
+        note=_NOTES[dominant],
+    )
+
+
+def load_artifacts(artifacts_dir: str, mesh: str = "pod16x16") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(artifacts_dir, mesh, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+_SHAPE_ORDER = {s: i for i, s in enumerate(INPUT_SHAPES)}
+
+
+def render_table(rows: list[RooflineRow]) -> str:
+    rows = sorted(rows, key=lambda r: (r.arch, _SHAPE_ORDER.get(r.shape, 9)))
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL/HLO flops | fits HBM |",
+        "|---|---|---:|---:|---:|---|---:|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {1e3*r.compute_s:.2f} | "
+            f"{1e3*r.memory_s:.2f} | {1e3*r.collective_s:.2f} | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+            f"{'yes' if r.fits_hbm else 'NO'} |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,38 @@
+"""Ambient activation-sharding context.
+
+Model code calls ``act_shard(x, "batch", "seq", None)`` to pin activation
+layouts; outside a launcher context (unit tests, 1-device smoke runs) this is
+a no-op.  The launchers install the production mesh + rule table, and the
+constraint becomes ``with_sharding_constraint`` with the resolved spec —
+exactly MaxText's ``nn.with_logical_constraint`` pattern without the flax
+dependency.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.rules import resolve_pspec
+
+_STATE: dict = {"mesh": None, "rules": None}
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules):
+    prev = dict(_STATE)
+    _STATE["mesh"], _STATE["rules"] = mesh, rules
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def act_shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    mesh, rules = _STATE["mesh"], _STATE["rules"]
+    if mesh is None:
+        return x
+    spec = resolve_pspec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,215 @@
+"""Logical axis names -> physical mesh axes, with divisibility fallback.
+
+Every parameter / activation dimension carries a *logical* axis name
+("embed", "heads", "mlp", ...).  A rule table maps logical names to mesh
+axes.  ``resolve_pspec`` applies the table to a concrete shape on a concrete
+mesh and *falls back to replication* whenever
+
+  - the mesh has no axis of that name (e.g. "pod" on the single-pod mesh),
+  - the dimension is not divisible by the product of the mapped axis sizes,
+  - the mesh axis was already consumed by an earlier dimension of the same
+    tensor (a physical axis may appear at most once in a PartitionSpec).
+
+This is what lets one model definition lower on a 1-device CPU for smoke
+tests, the 256-chip single pod and the 512-chip dual pod without per-arch
+special cases (DESIGN.md §7); whisper-small's 12 heads simply fall back to
+replicated heads on a model=16 mesh while its MLP still shards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Logical-name -> tuple of mesh axis names (tried in order, all-or-prefix).
+# ``None`` means "always replicate".
+TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "client": ("pod", "data"),  # FL cohort axis
+    "seq": None,
+    "embed": ("data",),  # ZeRO-3/FSDP shard of params over the data axis
+    "embed_act": None,  # activations keep embed replicated (TP gathers)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    # per-expert ffn dim: takes the model axis whenever "experts" could not
+    # (E < axis size, e.g. mixtral's 8 experts on model=16) — resolve_pspec's
+    # per-tensor used-axis tracking makes this safe when experts DO shard.
+    "expert_mlp": ("model",),
+    "expert_cap": ("data",),  # MoE dispatch buffers: capacity sharded over data
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "conv": None,
+    "kv_seq": None,
+    "layers": None,  # scanned layer stack axis
+    "stack": None,
+    "classes": None,
+    "hw": None,  # image spatial dims (CNN models)
+}
+
+# Serving keeps full parameters resident (no FSDP gather per step): params
+# replicate over "data", KV caches shard batch over data and heads over model.
+SERVE_RULES: Dict[str, Optional[Tuple[str, ...]]] = dict(
+    TRAIN_RULES,
+    embed=None,
+)
+
+# 70B+ class: even model-sharded weights exceed one chip's HBM replicated
+# over data; keep the ZeRO-3 embed shard at serving (per-layer all-gather).
+SERVE_FSDP_RULES: Dict[str, Optional[Tuple[str, ...]]] = dict(TRAIN_RULES)
+
+
+def profile_rules(
+    base: Dict[str, Optional[Tuple[str, ...]]], profile: str
+) -> Dict[str, Optional[Tuple[str, ...]]]:
+    """Apply a per-arch sharding profile to a rule table.
+
+    "tp" (default): the table as-is — model axis does tensor parallelism.
+    "dp": sub-1B models are collective-bound under TP=16 (§Perf iteration:
+    qwen1.5-0.5b's train step was 85% activation all-reduce).  Repurpose the
+    model axis as extra data parallelism: batch shards over every axis,
+    parameters ZeRO-3-shard over (data, model), per-layer weight all-gathers
+    replace per-layer activation all-reduces — wire bytes drop from
+    O(layers * batch * seq * d) to O(params).
+    """
+    if profile == "tp":
+        return base
+    if profile != "dp":
+        raise ValueError(f"unknown sharding profile {profile!r}")
+    out = dict(base)
+    out.update(
+        batch=("pod", "data", "model"),
+        client=("pod", "data", "model"),
+        embed=("data", "model") if base.get("embed") else None,
+        heads=None,
+        kv_heads=None,
+        head_dim=None,
+        mlp=("data", "model") if base.get("embed") else None,
+        vocab=None,
+        ssm_heads=None,
+        ssm_inner=None,
+        expert_cap=None,
+    )
+    return out
+
+
+@dataclass
+class Param:
+    """A parameter leaf annotated with logical axis names (one per dim).
+
+    Registered as a pytree node (value = child, axes = static aux data) so
+    ``jax.eval_shape`` can trace straight through model init functions —
+    that is how the dry-run gets parameter ShapeDtypeStructs *with* their
+    logical axes without allocating multi-GB tensors.
+    """
+
+    value: Any  # jnp.ndarray | jax.ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        # tolerate sentinel children (jax internals unflatten with dummies)
+        if hasattr(self.value, "shape") and len(self.axes) != len(self.value.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch for shape {self.value.shape}"
+            )
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: Param(children[0], axes),
+)
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Split a pytree of ``Param`` into (values, axes) pytrees."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return values, axes
+
+
+def resolve_pspec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Dict[str, Optional[Tuple[str, ...]]],
+    fallback_log: Optional[list] = None,
+) -> PartitionSpec:
+    """Resolve logical axes for one tensor into a PartitionSpec."""
+    used: set = set()
+    spec: list = []
+    mesh_sizes = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        # keep only axes present in this mesh and not yet used by this tensor
+        cand = tuple(a for a in axes if a in mesh_sizes and a not in used)
+        # shrink from the right until the dimension divides evenly
+        while cand:
+            prod = 1
+            for a in cand:
+                prod *= mesh_sizes[a]
+            if prod > 1 and dim % prod == 0:
+                break
+            cand = cand[:-1]
+        if cand:
+            prod = 1
+            for a in cand:
+                prod *= mesh_sizes[a]
+            if prod == 1:
+                cand = ()
+        if cand:
+            used.update(cand)
+            spec.append(cand if len(cand) > 1 else cand[0])
+        else:
+            if fallback_log is not None and axes:
+                fallback_log.append((name, tuple(shape), dim))
+            spec.append(None)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return PartitionSpec(*spec)
+
+
+def _is_axes_leaf(x) -> bool:
+    """An axes annotation: a plain tuple of axis names / None (incl. ()).
+
+    NamedTuples (TrainState, OptState) are containers, not leaves.
+    """
+    return (
+        isinstance(x, tuple)
+        and not hasattr(x, "_fields")
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def tree_pspecs(axes_tree, shapes_tree, mesh, rules, fallback_log=None):
+    """Map (axes, shapes) pytrees -> pytree of PartitionSpec."""
+
+    def _one(axes, shaped):
+        return resolve_pspec(axes, shaped.shape, mesh, rules, fallback_log)
+
+    return jax.tree_util.tree_map(_one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh, rules, fallback_log=None):
+    specs = tree_pspecs(axes_tree, shapes_tree, mesh, rules, fallback_log)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

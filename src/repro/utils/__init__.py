@@ -1,0 +1,32 @@
+"""Shared utilities: pytree helpers, registries, PRNG discipline."""
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_global_norm,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_weighted_sum,
+    tree_zeros_like,
+    tree_cast,
+    flatten_to_vector,
+    unflatten_from_vector,
+)
+from repro.utils.registry import Registry
+from repro.utils.prng import fold_in_str
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_global_norm",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_weighted_sum",
+    "tree_zeros_like",
+    "tree_cast",
+    "flatten_to_vector",
+    "unflatten_from_vector",
+    "Registry",
+    "fold_in_str",
+]

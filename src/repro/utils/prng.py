@@ -1,0 +1,18 @@
+"""PRNG discipline: every stochastic component folds a stable string tag.
+
+This keeps the traffic twin, data partitioner and FL simulation reproducible
+and independently re-seedable (changing the traffic seed does not perturb the
+data partition stream, etc.).
+"""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def fold_in_str(key: jax.Array, tag: str) -> jax.Array:
+    """Fold a string tag into a PRNG key deterministically."""
+    digest = hashlib.sha256(tag.encode("utf-8")).digest()
+    val = int.from_bytes(digest[:4], "little")
+    return jax.random.fold_in(key, val)

@@ -1,0 +1,92 @@
+"""Pytree arithmetic helpers used across the FL runtime and optimizers.
+
+All helpers are jit-safe (pure jnp) and preserve tree structure.  The FL
+server manipulates whole model states as pytrees; these utilities keep that
+code readable and fused.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total storage bytes of a pytree of arrays (per their dtypes)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_global_norm(tree: PyTree) -> jax.Array:
+    """L2 norm over every element of the pytree (fp32 accumulation)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_weighted_sum(trees: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted sum over the leading axis of a *stacked* pytree.
+
+    ``trees`` has leaves of shape ``(K, ...)`` (one slice per client);
+    ``weights`` is ``(K,)``.  Returns leaves of shape ``(...)``.  This is the
+    reference (pure-jnp) FedAvg contraction; the Pallas ``fedavg_reduce``
+    kernel implements the same contraction for the flattened-vector layout.
+    """
+
+    def _ws(x):
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(x.dtype)
+
+    return jax.tree_util.tree_map(_ws, trees)
+
+
+def flatten_to_vector(tree: PyTree) -> tuple[jax.Array, Any]:
+    """Flatten a pytree of arrays into one fp32 vector + a spec to invert.
+
+    Used for update sketches (random projections need a flat view) and for
+    the flat-layout aggregation kernel.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [x.shape for x in leaves]
+    dtypes = [x.dtype for x in leaves]
+    vec = jnp.concatenate([x.astype(jnp.float32).reshape(-1) for x in leaves]) if leaves else jnp.zeros((0,), jnp.float32)
+    return vec, (treedef, shapes, dtypes)
+
+
+def unflatten_from_vector(vec: jax.Array, spec) -> PyTree:
+    treedef, shapes, dtypes = spec
+    leaves = []
+    off = 0
+    for shape, dtype in zip(shapes, dtypes):
+        n = int(functools.reduce(lambda a, b: a * b, shape, 1))
+        leaves.append(vec[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,40 @@
+"""A tiny string-keyed registry with decorator registration.
+
+Used for architecture configs (``--arch <id>``), selection strategies and
+dataset builders, so the launchers stay table-driven.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Generic, Iterable, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, T] = {}
+
+    def register(self, name: str) -> Callable[[T], T]:
+        def deco(fn: T) -> T:
+            if name in self._items:
+                raise KeyError(f"duplicate {self.kind} registration: {name!r}")
+            self._items[name] = fn
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> T:
+        if name not in self._items:
+            known = ", ".join(sorted(self._items))
+            raise KeyError(f"unknown {self.kind} {name!r}; known: {known}")
+        return self._items[name]
+
+    def names(self) -> Iterable[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def items(self):
+        return sorted(self._items.items())

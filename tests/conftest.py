@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout import path (tests run from the repo root, no install needed)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device;
+# only launch/dryrun.py forces 512 placeholder devices (system requirement).

@@ -1,0 +1,63 @@
+"""Stage-3 data-level grouping: sketches + cosine k-means."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import kmeans_cluster, pairwise_cosine, update_sketch
+
+
+def test_kmeans_recovers_planted_clusters():
+    """Clients with the same label distribution should group together."""
+    key = jax.random.key(0)
+    centers = jax.random.normal(key, (4, 64))
+    labels_true = jnp.arange(40) % 4
+    pts = centers[labels_true] + 0.05 * jax.random.normal(jax.random.key(1), (40, 64))
+    labels, _ = kmeans_cluster(pts, jax.random.key(2), 4)
+    # same planted cluster -> same learned cluster (relabel-invariant check)
+    l = np.asarray(labels)
+    for g in range(4):
+        members = l[np.asarray(labels_true) == g]
+        assert len(set(members.tolist())) == 1, f"planted cluster {g} split"
+    assert len(set(l.tolist())) == 4
+
+
+def test_kmeans_deterministic():
+    pts = jax.random.normal(jax.random.key(3), (30, 16))
+    l1, c1 = kmeans_cluster(pts, jax.random.key(4), 5)
+    l2, c2 = kmeans_cluster(pts, jax.random.key(4), 5)
+    assert bool(jnp.all(l1 == l2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_sketch_preserves_cosine_similarity(seed):
+    """Count-sketch is an unbiased JL projection: cosine of sketches tracks
+    cosine of the originals for well-separated vectors."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    a = jax.random.normal(k1, (8192,))
+    b = jax.random.normal(k2, (8192,))
+    proj_key = jax.random.key(42)
+    sa = update_sketch(a, proj_key, 1024)
+    sb = update_sketch(b, proj_key, 1024)
+    cos_orig = float(jnp.dot(a, b) / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    cos_sk = float(jnp.dot(sa, sb))
+    assert abs(cos_orig - cos_sk) < 0.15
+    # identical vectors -> identical sketches
+    np.testing.assert_allclose(
+        np.asarray(update_sketch(a, proj_key, 1024)), np.asarray(sa), atol=1e-6
+    )
+
+
+def test_sketch_is_unit_norm():
+    v = jax.random.normal(jax.random.key(0), (5000,))
+    s = update_sketch(v, jax.random.key(1), 256)
+    assert abs(float(jnp.linalg.norm(s)) - 1.0) < 1e-5
+
+
+def test_pairwise_cosine_contract():
+    x = jax.random.normal(jax.random.key(0), (20, 100))
+    sim = pairwise_cosine(x)
+    np.testing.assert_allclose(np.diag(np.asarray(sim)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sim), np.asarray(sim).T, atol=1e-6)
+    assert float(jnp.max(jnp.abs(sim))) <= 1.0 + 1e-5

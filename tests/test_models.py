@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests (deliverable (f)) + decode consistency.
+
+Every assigned architecture instantiates its REDUCED variant (<=2 layers,
+d_model <= 512, <= 4 experts), runs one forward/train step on CPU and
+asserts output shapes + finiteness; LM families additionally check
+decode-vs-prefill logit agreement (the KV-cache/ring-buffer contract).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCH_IDS, get_smoke_config
+from repro.data import make_image_dataset, make_lm_batch
+from repro.models import build_model
+from repro.sharding import split_params
+
+LM_ARCHS = [a for a in ALL_ARCH_IDS if not a.startswith("fl-")]
+FL_ARCHS = [a for a in ALL_ARCH_IDS if a.startswith("fl-")]
+_DATASET = {"fl-mnist-mlp": "mnist", "fl-cifar10-cnn": "cifar10", "fl-svhn-cnn": "svhn"}
+
+
+def _lm_batch(cfg, b=2, s=24):
+    bb = make_lm_batch(jax.random.key(1), b, s + 1, cfg.vocab_size)
+    batch = {"tokens": bb["tokens"][:, :s], "targets": bb["targets"][:, :s]}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = 0.02 * jnp.ones((b, cfg.num_image_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = 0.02 * jnp.ones((b, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def _get(arch):
+        if arch not in cache:
+            cfg = get_smoke_config(arch)
+            api = build_model(cfg)
+            params, _ = split_params(api.init(jax.random.key(0)))
+            cache[arch] = (cfg, api, params)
+        return cache[arch]
+
+    return _get
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_reduced_variant_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_forward_and_train_step(arch, built):
+    cfg, api, params = built(arch)
+    batch = _lm_batch(cfg)
+    loss, metrics = api.loss(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch}: bad grads"
+    # one SGD step decreases loss on the same batch
+    p2 = jax.tree_util.tree_map(lambda p, g: p - 0.3 * g, params, grads)
+    l2, _ = api.loss(p2, batch)
+    assert float(l2) < float(loss), f"{arch}: step did not reduce loss"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_prefill_shapes(arch, built):
+    cfg, api, params = built(arch)
+    batch = {k: v for k, v in _lm_batch(cfg).items() if k != "targets"}
+    logits, cache = api.prefill(params, batch)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"][0]) > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_matches_prefill(arch, built):
+    """Token-by-token decode from a cache == one long prefill (per arch)."""
+    cfg, api, params = built(arch)
+    s = 17
+    bb = make_lm_batch(jax.random.key(3), 2, s + 4, cfg.vocab_size)
+    toks = bb["tokens"]
+    extra = {}
+    if cfg.family == "vlm":
+        extra["image_embeds"] = 0.02 * jnp.ones((2, cfg.num_image_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        extra["frames"] = 0.02 * jnp.ones((2, cfg.encoder_seq, cfg.d_model))
+
+    # KV budget must cover image tokens (vlm prepends them) + decode steps
+    budget = s + 4 + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+    lp, cache = api.prefill(params, {"tokens": toks[:, :s], **extra}, budget)
+    for i in range(2):
+        ld, cache = api.decode_step(params, cache, toks[:, s + i])
+    lfull, _ = api.prefill(params, {"tokens": toks[:, : s + 2], **extra}, budget)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lfull), atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", FL_ARCHS)
+def test_fl_model_smoke(arch, built):
+    cfg, api, params = built(arch)
+    x, y = make_image_dataset(jax.random.key(0), _DATASET[arch], 16)
+    loss, metrics = api.loss(params, {"images": x, "labels": y})
+    assert jnp.isfinite(loss)
+    assert 0.0 <= float(metrics["accuracy"]) <= 1.0
+
+
+def test_moe_routes_to_multiple_experts(built):
+    cfg, api, params = built("mixtral-8x7b")
+    from repro.models.moe import moe_ffn
+
+    block = jax.tree_util.tree_map(lambda x: x[0], params["blocks"][0]["moe"])
+    x = jax.random.normal(jax.random.key(0), (2, 16, cfg.d_model)).astype(jnp.float32)
+    y, aux = moe_ffn(block, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # balance loss lower bound is 1 (uniform)
+
+
+def test_ssd_scan_equals_sequential_recurrence():
+    """Chunked SSD == naive per-token recurrence (the SSM correctness core)."""
+    from repro.models.ssm import ssd_scan
+
+    B, S, nh, hp, ds = 2, 24, 3, 8, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bs = jax.random.normal(ks[3], (B, S, ds))
+    Cs = jax.random.normal(ks[4], (B, S, ds))
+    y_chunk, h_chunk = ssd_scan(x, dt, A, Bs, Cs, chunk=8)
+
+    # naive recurrence
+    h = jnp.zeros((B, nh, hp, ds))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A)  # (B,nh)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", Bs[:, t], dt[:, t], x[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cs[:, t]))
+    y_ref = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref), atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h), atol=2e-4, rtol=2e-3)
+
+
+def test_gemma2_pattern_and_softcap():
+    cfg = get_smoke_config("gemma2-9b")
+    assert cfg.layer_pattern == ("local", "global")
+    assert cfg.attn_logit_softcap == 50.0
+    from repro.models.transformer import cache_len_for
+
+    assert cache_len_for(cfg, "local", 1000) == cfg.sliding_window
+    assert cache_len_for(cfg, "global", 1000) == 1000
+
+
+def test_long_ctx_variant_caps_global_cache():
+    from repro.configs.gemma2_9b import long_ctx_config
+    from repro.models.transformer import cache_len_for
+
+    cfg = long_ctx_config()
+    assert cache_len_for(cfg, "global", 524_288) == 32_768
+    assert cache_len_for(cfg, "local", 524_288) == 4_096

@@ -1,0 +1,98 @@
+"""Strategy semantics (paper Tab. II) + Fast-gamma invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import STRATEGIES, select_clients
+
+N = 40
+
+
+def _setup(seed, frac_connected=0.8):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    connected = jax.random.bernoulli(ks[0], frac_connected, (N,))
+    latency = jax.random.uniform(ks[1], (N,), minval=0.1, maxval=5.0)
+    clusters = jax.random.randint(ks[2], (N,), 0, 5)
+    return connected, latency, clusters
+
+
+def test_greedy_selects_all_connected():
+    connected, lat, cl = _setup(0)
+    mask = select_clients("greedy", jax.random.key(1), connected, lat, cl, 4, 0.1)
+    assert bool(jnp.all(mask == connected))
+
+
+@pytest.mark.parametrize("strategy", ["gossip", "data", "network", "contextual"])
+def test_selection_respects_connectivity_and_budget(strategy):
+    for seed in range(5):
+        connected, lat, cl = _setup(seed)
+        mask = select_clients(strategy, jax.random.key(seed), connected, lat, cl, 4, 0.1)
+        assert bool(jnp.all(~mask | connected)), "selected a disconnected client"
+        assert int(mask.sum()) <= 4
+        if int(connected.sum()) >= 4:
+            assert int(mask.sum()) == 4
+
+
+def test_network_picks_lowest_latency():
+    connected, lat, cl = _setup(3)
+    mask = select_clients("network", jax.random.key(0), connected, lat, cl, 4, 0.1)
+    sel_lat = np.asarray(lat)[np.asarray(mask)]
+    unsel = np.asarray(connected) & ~np.asarray(mask)
+    assert sel_lat.max() <= np.asarray(lat)[unsel].min() + 1e-6
+
+
+def test_contextual_fastest_per_cluster():
+    """Fast-gamma: every selected client is the fastest *connected* member
+    rank within its cluster quota."""
+    connected, lat, cl = _setup(7)
+    mask = select_clients("contextual", jax.random.key(0), connected, lat, cl, 5, 0.1)
+    m, c, l, conn = map(np.asarray, (mask, cl, lat, connected))
+    for i in np.nonzero(m)[0]:
+        same = (c == c[i]) & conn
+        # quota of cluster = ceil(gamma * cluster size) >= 1
+        quota = max(int(np.ceil(0.1 * same.sum())), 1)
+        rank = int((l[same] < l[i]).sum())
+        assert rank < quota, f"client {i} not within Fast-gamma quota"
+
+
+def test_contextual_covers_more_clusters_than_network():
+    """With clustered latency structure, contextual trades some latency for
+    cluster coverage (the paper's data-heterogeneity argument)."""
+    # all low-latency clients in cluster 0: network-based piles onto it
+    lat = jnp.concatenate([jnp.full((8,), 0.1), jnp.full((32,), 1.0)])
+    cl = jnp.concatenate([jnp.zeros((8,), jnp.int32),
+                          (jnp.arange(32) % 4 + 1).astype(jnp.int32)])
+    connected = jnp.ones((40,), bool)
+    m_net = select_clients("network", jax.random.key(0), connected, lat, cl, 5, 0.1)
+    m_ctx = select_clients("contextual", jax.random.key(0), connected, lat, cl, 5, 0.1)
+    cov = lambda m: len(set(np.asarray(cl)[np.asarray(m)].tolist()))
+    assert cov(m_ctx) > cov(m_net)
+    assert cov(m_ctx) == 5
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_select=st.integers(1, 12),
+       gamma=st.floats(0.05, 0.9))
+def test_contextual_properties(seed, n_select, gamma):
+    connected, lat, cl = _setup(seed)
+    mask = select_clients("contextual", jax.random.key(seed), connected, lat, cl,
+                          n_select, gamma)
+    assert bool(jnp.all(~mask | connected))
+    assert int(mask.sum()) <= n_select
+
+
+def test_unknown_strategy_raises():
+    connected, lat, cl = _setup(0)
+    with pytest.raises(KeyError):
+        select_clients("nope", jax.random.key(0), connected, lat, cl, 4, 0.1)
+
+
+def test_gossip_is_random_but_seeded():
+    connected, lat, cl = _setup(1)
+    m1 = select_clients("gossip", jax.random.key(5), connected, lat, cl, 4, 0.1)
+    m2 = select_clients("gossip", jax.random.key(5), connected, lat, cl, 4, 0.1)
+    m3 = select_clients("gossip", jax.random.key(6), connected, lat, cl, 4, 0.1)
+    assert bool(jnp.all(m1 == m2))
+    assert not bool(jnp.all(m1 == m3))  # different key, different subset

@@ -1,0 +1,98 @@
+"""Digital twin, V2X fusion, trajectory prediction, latency model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import TrafficConfig
+from repro.core import (
+    TrafficTwin,
+    build_rttg,
+    emit_cams,
+    emit_cpms,
+    fuse_messages,
+    latency_model,
+    predict_rttg,
+)
+
+CFG = TrafficConfig(num_vehicles=40)
+
+
+def _twin_state(seed=0, t=5.0):
+    twin = TrafficTwin(CFG, jax.random.key(seed))
+    return twin, twin.advance(twin.init_state(), jax.random.key(seed + 1), t)
+
+
+def test_twin_invariants():
+    twin, st_ = _twin_state()
+    assert bool(jnp.all(st_.pos >= 0)) and bool(jnp.all(st_.pos < CFG.ring_length_m))
+    assert bool(jnp.all(st_.speed >= 1.0))
+    assert bool(jnp.all(st_.speed <= 3.0 * CFG.mean_speed_mps))
+    # deterministic given seed
+    _, st2 = _twin_state()
+    np.testing.assert_allclose(np.asarray(st_.pos), np.asarray(st2.pos))
+
+
+def _ring_err(a, b, L):
+    d = np.abs(np.asarray(a) - np.asarray(b))
+    return np.minimum(d, L - d)
+
+
+def test_fusion_beats_single_cpm_observation():
+    """Inverse-variance fusion of CAM+CPMs must be at least GNSS-accurate."""
+    _, st_ = _twin_state(2)
+    k = jax.random.key(3)
+    rttg = fuse_messages(emit_cams(st_, CFG, k), emit_cpms(st_, CFG, k), st_.t, CFG)
+    err = _ring_err(rttg.pos, st_.pos, CFG.ring_length_m)
+    assert err.mean() < 1.5  # CAM pos std = 1.0 m; fusion should not hurt
+    assert bool(jnp.all(rttg.pos_var > 0))
+
+
+def test_prediction_error_grows_with_horizon():
+    twin, st_ = _twin_state(4)
+    k = jax.random.key(5)
+    rttg = fuse_messages(emit_cams(st_, CFG, k), emit_cpms(st_, CFG, k), st_.t, CFG)
+    errs = []
+    for h in (1.0, 5.0, 15.0):
+        fut = predict_rttg(rttg, h, CFG)
+        true = twin.advance(st_, jax.random.key(99), h)
+        errs.append(_ring_err(fut.pos, true.pos, CFG.ring_length_m).mean())
+    assert errs[0] < errs[2], f"prediction error should grow: {errs}"
+    assert errs[0] < 5.0, f"1s prediction should be accurate: {errs}"
+
+
+def test_latency_monotonic_in_rsu_distance():
+    """Pathloss: farther from the RSU -> lower SNR -> higher latency."""
+    pos = jnp.array([0.0, 100.0, 200.0, 300.0, 400.0])  # RSU at 0 (spacing 1000)
+    rttg = build_rttg(0.0, pos, jnp.full((5,), 14.0), jnp.zeros(5), jnp.zeros(5), CFG)
+    lat = np.asarray(latency_model(rttg, 4e6, CFG))
+    assert np.all(np.diff(lat) > 0), f"latency not monotonic: {lat}"
+
+
+def test_latency_increases_with_load():
+    cfg_dense = TrafficConfig(num_vehicles=40)
+    pos_spread = jnp.linspace(0, cfg_dense.ring_length_m, 40, endpoint=False)
+    pos_jam = jnp.full((40,), 123.0)  # everyone on one RSU
+    mk = lambda p: build_rttg(0.0, p, jnp.full((40,), 14.0), jnp.zeros(40), jnp.zeros(40), cfg_dense)
+    lat_spread = float(latency_model(mk(pos_spread), 4e6, cfg_dense).mean())
+    lat_jam = float(latency_model(mk(pos_jam), 4e6, cfg_dense).mean())
+    assert lat_jam > lat_spread
+
+
+@settings(max_examples=20, deadline=None)
+@given(mb=st.floats(1e5, 1e8))
+def test_latency_monotonic_in_model_bytes(mb):
+    _, st_ = _twin_state(6)
+    rttg = build_rttg(0.0, st_.pos, st_.speed, st_.accel, jnp.zeros_like(st_.pos), CFG)
+    l1 = np.asarray(latency_model(rttg, mb, CFG))
+    l2 = np.asarray(latency_model(rttg, mb * 2, CFG))
+    assert np.all(l2 >= l1)
+
+
+def test_cpm_perception_range():
+    _, st_ = _twin_state(7)
+    cpms = emit_cpms(st_, CFG, jax.random.key(8))
+    d = np.asarray(st_.pos)[np.asarray(cpms["src"])] - np.asarray(st_.pos)[np.asarray(cpms["obj"])]
+    d = np.minimum(np.abs(d), CFG.ring_length_m - np.abs(d))
+    valid = np.asarray(cpms["valid"])
+    assert np.all(d[valid] < 150.0 + 1e-3)
