@@ -10,12 +10,14 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks import ablation_prediction, fig3_convergence, fig4_class_ratio
-from benchmarks import kernel_bench, roofline_report, table1_connection_rate
+from benchmarks import ablation_prediction, engine_throughput, fig3_convergence
+from benchmarks import fig4_class_ratio, kernel_bench, roofline_report
+from benchmarks import table1_connection_rate
 
 SECTIONS = {
     "kernels": kernel_bench.main,
     "roofline": roofline_report.main,
+    "engine": engine_throughput.main,
     "fig3": fig3_convergence.main,
     "table1": table1_connection_rate.main,
     "fig4": fig4_class_ratio.main,

@@ -269,5 +269,11 @@ class FLConfig:
     samples_per_client: int = 512
     compute_s_per_epoch: float = 0.5  # client-side local training time model
     server_agg_s: float = 0.05
+    round_timeout_s: float = 15.0  # deadline a round pays when uploads miss it
     recluster_every: int = 5  # rounds between re-clustering (deadline rule)
     seed: int = 0
+
+    @property
+    def n_select(self) -> int:
+        """Per-round selection budget (the paper's 10% rate, at least 1)."""
+        return max(int(round(self.select_fraction * self.num_clients)), 1)

@@ -9,7 +9,8 @@ Pipeline stages (paper Fig. 2):
 The traffic digital twin (ground truth the messages observe) lives in
 repro.core.twin; the analytic radio/latency model in repro.core.network.
 """
-from repro.core.twin import TrafficTwin, TwinState
+from repro.core.twin import TrafficTwin, TwinState, advance_twin, init_twin_state, twin_step
+from repro.core.scenarios import SCENARIOS, ScenarioParams, scenario_config, scenario_params, stack_scenarios
 from repro.core.messages import emit_cams, emit_cpms
 from repro.core.fusion import fuse_messages
 from repro.core.rttg import RTTG, build_rttg
@@ -22,6 +23,14 @@ from repro.core.pipeline import ContextualSelector
 __all__ = [
     "TrafficTwin",
     "TwinState",
+    "advance_twin",
+    "init_twin_state",
+    "twin_step",
+    "SCENARIOS",
+    "ScenarioParams",
+    "scenario_config",
+    "scenario_params",
+    "stack_scenarios",
     "emit_cams",
     "emit_cpms",
     "fuse_messages",

@@ -118,7 +118,7 @@ class ContextualSelector:
         """Run stages 2+4 for the current round; returns a dict with the
         participation mask and the intermediate signals (for logging)."""
         k = jax.random.fold_in(self.key, self._round)
-        n_select = max(int(round(self.fl.select_fraction * self.fl.num_clients)), 1)
+        n_select = self.fl.n_select
         mask, connected, lat_pred, future = self._elect_jit(
             self.rttg, self.clusters, jnp.asarray(model_bytes, jnp.float32), k,
             strategy=strategy, n_select=n_select,

@@ -34,9 +34,27 @@ def _ring_dist(a, b, length):
     return jnp.minimum(d, length - d)
 
 
+def n_rsu_of(cfg) -> int:
+    """Static RSU count of a traffic config.
+
+    ``ScenarioParams`` carries it precomputed (its geometry fields may be
+    traced); a concrete ``TrafficConfig`` derives it from the geometry.
+    The single source of the count/shape rule for both representations.
+    """
+    n = getattr(cfg, "n_rsu", None)
+    if n is not None:
+        return n
+    return max(int(cfg.ring_length_m / cfg.rsu_spacing_m), 1)
+
+
 def rsu_geometry(pos: jax.Array, cfg: TrafficConfig):
-    """Nearest-RSU id, 3D distance and per-RSU load for arc positions."""
-    n_rsu = max(int(cfg.ring_length_m / cfg.rsu_spacing_m), 1)
+    """Nearest-RSU id, 3D distance and per-RSU load for arc positions.
+
+    ``cfg`` may be a concrete ``TrafficConfig`` or a traced
+    ``core.scenarios.ScenarioParams``; the RSU *count* is always static
+    (it sets array shapes) while the spacing may be traced.
+    """
+    n_rsu = n_rsu_of(cfg)
     rsu_pos = jnp.arange(n_rsu) * cfg.rsu_spacing_m
     d_along = _ring_dist(pos[:, None], rsu_pos[None, :], cfg.ring_length_m)
     rid = jnp.argmin(d_along, axis=1)

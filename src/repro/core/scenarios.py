@@ -1,0 +1,163 @@
+"""Scenario catalog + traced traffic parameters for the batched engine.
+
+The paper's experiments fix one road topology; convincing strategy
+comparisons need many scenario repetitions (Chellapandi et al. 2023).  This
+module provides (a) a catalog of named ``TrafficConfig`` variants — ring,
+highway and urban-grid density settings of the same RSU count — and (b)
+``ScenarioParams``, a pytree view of the scenario-varying fields so a whole
+(strategy x seed x scenario) grid runs as ONE vmapped program.
+
+Design rule: every field that determines an array *shape* or a loop *trip
+count* (vehicle count, RSU count, sub-step dt, prediction horizon) is static
+metadata and must agree across a stacked grid; everything else (geometry,
+kinematics, radio constants) is a traced leaf and may vary per scenario.
+All catalog entries therefore share ``n_rsu`` (ring length / RSU spacing)
+so density varies while the compiled program does not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrafficConfig
+from repro.core.rttg import n_rsu_of
+
+_TRACED_FIELDS = (
+    "ring_length_m",
+    "rsu_spacing_m",
+    "mean_speed_mps",
+    "speed_std_mps",
+    "accel_std",
+    "ou_theta",
+    "carrier_ghz",
+    "bandwidth_hz",
+    "eirp_dbm",
+    "noise_dbm",
+    "snr_min_db",
+    "backhaul_s",
+    "queue_s_per_vehicle",
+    "overhead_bytes",
+)
+_STATIC_FIELDS = (
+    "num_vehicles",
+    "num_lanes",
+    "n_rsu",
+    "cam_rate_hz",
+    "sim_dt_s",
+    "predict_horizon_s",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioParams:
+    """Duck-types ``TrafficConfig`` for the jitted round core.
+
+    Traced fields may be scalars (one scenario) or ``(G,)`` leaves under
+    vmap; static fields are pytree metadata shared by the whole grid.
+    """
+
+    ring_length_m: jax.Array
+    rsu_spacing_m: jax.Array
+    mean_speed_mps: jax.Array
+    speed_std_mps: jax.Array
+    accel_std: jax.Array
+    ou_theta: jax.Array
+    carrier_ghz: jax.Array
+    bandwidth_hz: jax.Array
+    eirp_dbm: jax.Array
+    noise_dbm: jax.Array
+    snr_min_db: jax.Array
+    backhaul_s: jax.Array
+    queue_s_per_vehicle: jax.Array
+    overhead_bytes: jax.Array
+    num_vehicles: int
+    num_lanes: int
+    n_rsu: int
+    cam_rate_hz: float
+    sim_dt_s: float
+    predict_horizon_s: float
+
+
+jax.tree_util.register_dataclass(
+    ScenarioParams,
+    data_fields=list(_TRACED_FIELDS),
+    meta_fields=list(_STATIC_FIELDS),
+)
+
+
+def scenario_params(cfg: TrafficConfig) -> ScenarioParams:
+    """Lift a concrete TrafficConfig into the traced representation."""
+    traced = {f: jnp.asarray(getattr(cfg, f), jnp.float32) for f in _TRACED_FIELDS}
+    return ScenarioParams(
+        **traced,
+        num_vehicles=cfg.num_vehicles,
+        num_lanes=cfg.num_lanes,
+        n_rsu=n_rsu_of(cfg),
+        cam_rate_hz=cfg.cam_rate_hz,
+        sim_dt_s=cfg.sim_dt_s,
+        predict_horizon_s=cfg.predict_horizon_s,
+    )
+
+
+def stack_scenarios(params: Sequence[ScenarioParams]) -> ScenarioParams:
+    """Stack scenarios along a leading grid axis (static fields must agree)."""
+    metas = {tuple(getattr(p, f) for f in _STATIC_FIELDS) for p in params}
+    if len(metas) != 1:
+        raise ValueError(
+            f"scenarios disagree on static fields {_STATIC_FIELDS}: {sorted(metas)}"
+        )
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+
+
+# ---------------------------------------------------------------------------
+# Catalog: same fleet + RSU count, different road geometry / kinematics, so
+# vehicle DENSITY (vehicles per km) and radio contention vary per scenario.
+# ---------------------------------------------------------------------------
+
+def ring(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """The paper's default: 10 km urban ring, ~50 km/h."""
+    return TrafficConfig(num_vehicles=num_vehicles, **kw)
+
+
+def highway(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Sparse fast traffic: 20 km loop, RSUs every 2 km, ~110 km/h."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=20_000.0,
+        rsu_spacing_m=2_000.0,
+        mean_speed_mps=30.0,
+        speed_std_mps=4.0,
+        accel_std=0.5,
+        queue_s_per_vehicle=0.008,
+        **kw,
+    )
+
+
+def urban_grid(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Dense slow grid traffic: 5 km loop, RSUs every 500 m, ~30 km/h."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=5_000.0,
+        rsu_spacing_m=500.0,
+        mean_speed_mps=8.0,
+        speed_std_mps=3.0,
+        accel_std=1.2,
+        queue_s_per_vehicle=0.015,
+        **kw,
+    )
+
+
+SCENARIOS: Dict[str, callable] = {
+    "ring": ring,
+    "highway": highway,
+    "urban_grid": urban_grid,
+}
+
+
+def scenario_config(name: str, num_vehicles: int = 100, **kw) -> TrafficConfig:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return SCENARIOS[name](num_vehicles=num_vehicles, **kw)

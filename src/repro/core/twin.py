@@ -5,6 +5,11 @@ qualities vary with road traffic; the underlying simulator is unspecified.
 This twin is the explicit substrate (DESIGN.md §5): N CAVs on a multi-lane
 ring road with Ornstein-Uhlenbeck acceleration noise, RSUs at fixed spacing.
 All state transitions are jnp + seeded PRNG — fully reproducible.
+
+The transition functions are pure module-level functions (``cfg`` may be a
+concrete ``TrafficConfig`` or a traced ``ScenarioParams``) so the batched
+scan engine can fold them into one jitted program; ``TrafficTwin`` is the
+stateful convenience wrapper the interactive API uses.
 """
 from __future__ import annotations
 
@@ -26,6 +31,88 @@ class TwinState(NamedTuple):
     compute_factor: jax.Array  # (N,) per-client compute heterogeneity (>0)
 
 
+def init_twin_state(cfg, key: jax.Array) -> TwinState:
+    """Fresh ground-truth state (``key`` is the twin's init key)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    N = cfg.num_vehicles
+    pos = jax.random.uniform(k1, (N,), jnp.float32, 0.0, cfg.ring_length_m)
+    speed = jnp.clip(
+        cfg.mean_speed_mps + cfg.speed_std_mps * jax.random.normal(k2, (N,)),
+        2.0,
+        2.5 * cfg.mean_speed_mps,
+    )
+    lane = jax.random.randint(k3, (N,), 0, cfg.num_lanes)
+    # lognormal compute heterogeneity: median 1x, some clients 2-3x slower
+    compute = jnp.exp(0.35 * jax.random.normal(k4, (N,)))
+    return TwinState(
+        t=jnp.zeros((), jnp.float32),
+        pos=pos,
+        speed=speed,
+        accel=jnp.zeros((N,), jnp.float32),
+        lane=lane,
+        compute_factor=compute,
+    )
+
+
+def twin_step(state: TwinState, cfg, key: jax.Array, dt: float) -> TwinState:
+    """One OU + kinematic integration step of ``dt`` seconds."""
+    N = state.pos.shape[0]
+    eps = jax.random.normal(key, (N,))
+    accel = (
+        state.accel
+        - cfg.ou_theta * state.accel * dt
+        + cfg.accel_std * jnp.sqrt(jnp.asarray(dt)) * eps
+    )
+    speed = jnp.clip(state.speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
+    pos = jnp.mod(state.pos + speed * dt, cfg.ring_length_m)
+    return state._replace(t=state.t + dt, pos=pos, speed=speed, accel=accel)
+
+
+def advance_twin(
+    state: TwinState, cfg, key: jax.Array, duration, num_substeps: int = 0
+) -> TwinState:
+    """Advance a *traced* ``duration`` seconds without touching the host.
+
+    With ``num_substeps > 0`` the duration is split into that many EQUAL
+    sub-steps (``dt = duration / n``): the loop bound is static, so under
+    ``vmap`` every grid lane costs the same — no lock-stepping on the
+    slowest lane's round duration.  Because dt can be coarse on timeout
+    rounds (~1 s), this path uses the EXACT OU transition — drift
+    ``exp(-theta*dt)`` and noise variance ``sigma^2 (1-exp(-2 theta dt)) /
+    (2 theta)`` — so the acceleration process is dt-invariant in
+    distribution; only the speed-clip / ring-wrap kinematics see the
+    coarser grid.
+
+    With ``num_substeps = 0`` it falls back to fixed ``sim_dt_s`` sub-steps
+    and a data-dependent trip count (lowers to a while-loop) — the same
+    Euler grid as the host-side ``TrafficTwin.advance``.
+    """
+    if num_substeps > 0:
+        dt = jnp.asarray(duration, jnp.float32) / num_substeps
+        decay = jnp.exp(-cfg.ou_theta * dt)
+        noise_std = cfg.accel_std * jnp.sqrt(
+            (1.0 - decay**2) / jnp.maximum(2.0 * cfg.ou_theta, 1e-6)
+        )
+
+        def body(i, s):
+            N = s.pos.shape[0]
+            eps = jax.random.normal(jax.random.fold_in(key, i), (N,))
+            accel = s.accel * decay + noise_std * eps
+            speed = jnp.clip(s.speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
+            pos = jnp.mod(s.pos + speed * dt, cfg.ring_length_m)
+            return s._replace(t=s.t + dt, pos=pos, speed=speed, accel=accel)
+
+        return jax.lax.fori_loop(0, num_substeps, body, state)
+
+    dt = cfg.sim_dt_s
+    n = jnp.maximum(jnp.round(jnp.asarray(duration) / dt).astype(jnp.int32), 1)
+
+    def body(i, s):
+        return twin_step(s, cfg, jax.random.fold_in(key, i), dt)
+
+    return jax.lax.fori_loop(0, n, body, state)
+
+
 class TrafficTwin:
     """Owns the ground-truth state and advances it with OU dynamics."""
 
@@ -34,57 +121,20 @@ class TrafficTwin:
         self.key = fold_in_str(key, "traffic-twin")
 
     def init_state(self) -> TwinState:
-        c = self.cfg
-        k1, k2, k3, k4 = jax.random.split(fold_in_str(self.key, "init"), 4)
-        N = c.num_vehicles
-        pos = jax.random.uniform(k1, (N,), jnp.float32, 0.0, c.ring_length_m)
-        speed = jnp.clip(
-            c.mean_speed_mps + c.speed_std_mps * jax.random.normal(k2, (N,)),
-            2.0,
-            2.5 * c.mean_speed_mps,
-        )
-        lane = jax.random.randint(k3, (N,), 0, c.num_lanes)
-        # lognormal compute heterogeneity: median 1x, some clients 2-3x slower
-        compute = jnp.exp(0.35 * jax.random.normal(k4, (N,)))
-        return TwinState(
-            t=jnp.zeros((), jnp.float32),
-            pos=pos,
-            speed=speed,
-            accel=jnp.zeros((N,), jnp.float32),
-            lane=lane,
-            compute_factor=compute,
-        )
+        return init_twin_state(self.cfg, fold_in_str(self.key, "init"))
 
     def step(self, state: TwinState, key: jax.Array, dt: float) -> TwinState:
-        """One OU + kinematic integration step of ``dt`` seconds."""
-        c = self.cfg
-        N = c.num_vehicles
-        eps = jax.random.normal(key, (N,))
-        accel = (
-            state.accel
-            - c.ou_theta * state.accel * dt
-            + c.accel_std * jnp.sqrt(jnp.asarray(dt)) * eps
-        )
-        speed = jnp.clip(state.speed + accel * dt, 1.0, 3.0 * c.mean_speed_mps)
-        pos = jnp.mod(state.pos + speed * dt, c.ring_length_m)
-        return state._replace(t=state.t + dt, pos=pos, speed=speed, accel=accel)
+        return twin_step(state, self.cfg, key, dt)
 
     def advance(self, state: TwinState, key: jax.Array, duration: float) -> TwinState:
         """Advance ``duration`` seconds in ``sim_dt_s`` sub-steps.
 
-        The step count is a *traced* scalar (fori_loop), so one compiled
-        program serves every round duration — round times vary per round and
-        per strategy, and retracing per duration would dominate wall-clock.
+        Delegates to ``advance_twin``'s data-dependent branch: the step
+        count is a *traced* scalar, so one compiled program serves every
+        round duration — round times vary per round and per strategy, and
+        retracing per duration would dominate wall-clock.
         """
         if not hasattr(self, "_advance_jit"):
             c = self.cfg
-
-            def _adv(state, key, n):
-                def body(i, s):
-                    return self.step(s, jax.random.fold_in(key, i), c.sim_dt_s)
-
-                return jax.lax.fori_loop(0, n, body, state)
-
-            self._advance_jit = jax.jit(_adv)
-        n = max(int(round(duration / self.cfg.sim_dt_s)), 1)
-        return self._advance_jit(state, key, jnp.asarray(n, jnp.int32))
+            self._advance_jit = jax.jit(lambda s, k, d: advance_twin(s, c, k, d))
+        return self._advance_jit(state, key, jnp.asarray(duration, jnp.float32))

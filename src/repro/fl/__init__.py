@@ -1,14 +1,38 @@
-"""Federated-learning runtime: partitioning, clients, server, simulation."""
+"""Federated-learning runtime: partitioning, clients, server, round core,
+the batched experiment engine, and the legacy per-round simulation API."""
 from repro.fl.partition import partition_clients, make_test_set
 from repro.fl.client import make_local_trainer
 from repro.fl.server import fedavg_aggregate
-from repro.fl.simulation import FLSimulation, RoundRecord
+from repro.fl.rounds import (
+    RoundData,
+    RoundMetrics,
+    RoundRecord,
+    RoundState,
+    STRATEGY_ORDER,
+    init_experiment,
+    make_round_step,
+    make_warmup,
+    metrics_to_records,
+)
+from repro.fl.engine import ExperimentEngine, GridResult
+from repro.fl.simulation import FLSimulation, time_to_accuracy
 
 __all__ = [
     "partition_clients",
     "make_test_set",
     "make_local_trainer",
     "fedavg_aggregate",
-    "FLSimulation",
+    "RoundData",
+    "RoundMetrics",
     "RoundRecord",
+    "RoundState",
+    "STRATEGY_ORDER",
+    "init_experiment",
+    "make_round_step",
+    "make_warmup",
+    "metrics_to_records",
+    "ExperimentEngine",
+    "GridResult",
+    "FLSimulation",
+    "time_to_accuracy",
 ]

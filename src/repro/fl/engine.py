@@ -1,0 +1,214 @@
+"""Batched FL experiment engine: (strategy x seed x scenario) grids on device.
+
+The legacy loop runs ONE experiment at a time with a host round-trip every
+round.  This engine runs a whole grid as a single XLA program:
+
+  * each experiment is a ``lax.scan`` of the pure ``round_step`` over
+    rounds (zero per-round host syncs; eval is a strided ``lax.cond``);
+  * the grid axis is a ``vmap`` over (RoundState, RoundData, ScenarioParams,
+    strategy index), so strategies, seeds and scenarios batch together;
+  * per-round test evaluation is hoisted to every ``eval_every`` rounds
+    (the final round always evaluates).
+
+Usage:
+
+    eng = ExperimentEngine(model_cfg, fl_cfg, "mnist",
+                           strategies=("contextual", "gossip"))
+    result = eng.run_grid(strategies=("contextual", "gossip"),
+                          seeds=(0, 1), scenarios=("ring", "highway"),
+                          rounds=40, eval_every=5)
+    result.records(strategy="contextual", seed=0, scenario="ring")
+
+Scenario names resolve through ``repro.core.scenarios``; passing explicit
+``TrafficConfig`` objects also works as long as their static geometry
+(vehicle count, RSU count) agrees across the grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig, ModelConfig, TrafficConfig
+from repro.core.scenarios import scenario_config, scenario_params, stack_scenarios
+from repro.fl.rounds import (
+    RoundMetrics,
+    RoundRecord,
+    cohort_size_for,
+    flat_spec_of,
+    init_experiment,
+    make_round_step,
+    make_warmup,
+    metrics_to_records,
+)
+from repro.models import build_model
+from repro.utils import tree_bytes
+
+ScenarioLike = Union[str, TrafficConfig]
+
+
+def _eval_flags(rounds: int, eval_every: int) -> jnp.ndarray:
+    flags = [(r + 1) % max(eval_every, 1) == 0 or r == rounds - 1 for r in range(rounds)]
+    return jnp.asarray(flags)
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Stacked metrics for a flat experiment grid."""
+
+    metrics: RoundMetrics  # leaves (G, rounds)
+    runs: List[Tuple[str, int, str]]  # (strategy, seed, scenario name) per row
+
+    def index_of(self, strategy: str, seed: int, scenario: str) -> int:
+        return self.runs.index((strategy, seed, scenario))
+
+    def records(self, strategy: str, seed: int, scenario: str) -> List[RoundRecord]:
+        g = self.index_of(strategy, seed, scenario)
+        one = jax.tree_util.tree_map(lambda x: x[g], self.metrics)
+        return metrics_to_records(one)
+
+    def final_accuracy(self) -> Dict[Tuple[str, int, str], float]:
+        import numpy as np
+
+        acc = np.asarray(self.metrics.test_acc)
+        return {run: float(acc[g, -1]) for g, run in enumerate(self.runs)}
+
+
+class ExperimentEngine:
+    """Compiles one program per (rounds, grid-shape) and reuses it."""
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        fl_cfg: FLConfig,
+        dataset: str,
+        strategies: Sequence[str] = ("contextual",),
+        num_clients: Optional[int] = None,
+    ):
+        if num_clients is not None:
+            fl_cfg = dataclasses.replace(fl_cfg, num_clients=num_clients)
+        self.fl = fl_cfg
+        self.dataset = dataset
+        self.strategies = tuple(strategies)
+        self.api = build_model(model_cfg)
+        self.cohort_size = cohort_size_for(fl_cfg, self.strategies)
+        self._round_step = None
+        self._grid_fn = jax.jit(self._grid, static_argnames=("warm",))
+
+    # -- lazy build: model bytes / flat spec need a concrete param tree ----
+    def _ensure_step(self, params):
+        if self._round_step is None:
+            self.model_bytes = float(tree_bytes(params))
+            self.param_spec = flat_spec_of(params)
+            self._round_step = make_round_step(
+                self.api.loss, self.fl, self.cohort_size, self.model_bytes,
+                self.param_spec, strategies=self.strategies,
+            )
+            self._warmup = make_warmup(self.api.loss, self.fl)
+        return self._round_step
+
+    def _traffic_of(self, scenario: ScenarioLike) -> TrafficConfig:
+        if isinstance(scenario, TrafficConfig):
+            return scenario
+        return scenario_config(scenario, num_vehicles=self.fl.num_clients)
+
+    def init_run(self, strategy: str, seed: int, scenario: ScenarioLike):
+        """Host-side build of one grid row: (state, data, scn, strategy_idx)."""
+        tc = self._traffic_of(scenario)
+        state, data = init_experiment(
+            self.api, self.fl, tc, self.dataset, strategy, jax.random.key(seed)
+        )
+        self._ensure_step(state.params)
+        # local index into this engine's strategy tuple (the switch carries
+        # only those branches), not the global STRATEGY_ORDER
+        return state, data, scenario_params(tc), self.strategies.index(strategy)
+
+    # -- the single compiled program --------------------------------------
+    def _grid(self, states, datas, scns, strat_idx, data_idx, flags,
+              warm: bool = True):
+        # ``datas`` is unbatched (in_axes=None): rows differing only by
+        # scenario share byte-identical client shards + test sets (the
+        # experiment key folds strategy/seed/dataset, never the scenario),
+        # so it holds one row per unique (strategy, seed) and each lane
+        # gathers its row by ``data_idx`` — not one copy per grid cell.
+        step = self._round_step
+
+        def one(state, scn, si, di):
+            data = jax.tree_util.tree_map(lambda x: x[di], datas)
+            if warm:
+                state = self._warmup(state, data)
+
+            def body(s, flag):
+                return step(s, scn, si, data, flag)
+
+            final, metrics = jax.lax.scan(body, state, flags)
+            return final, metrics
+
+        return jax.vmap(one, in_axes=(0, 0, 0, 0))(states, scns, strat_idx, data_idx)
+
+    def run_grid(
+        self,
+        seeds: Sequence[int],
+        scenarios: Sequence[ScenarioLike],
+        rounds: int,
+        strategies: Optional[Sequence[str]] = None,
+        eval_every: int = 1,
+    ) -> GridResult:
+        """Run the full (strategy x seed x scenario) grid as one program."""
+        strategies = tuple(strategies) if strategies is not None else self.strategies
+        unknown = set(strategies) - set(self.strategies)
+        if unknown:
+            raise ValueError(
+                f"strategies {sorted(unknown)} not covered by this engine's "
+                f"cohort size; construct it with strategies={sorted(set(self.strategies) | unknown)}"
+            )
+        runs = list(itertools.product(strategies, seeds, scenarios))
+        states, scn_list, sidx = [], [], []
+        data_rows, data_row_of, didx = [], {}, []
+        for strategy, seed, scenario in runs:
+            st, da, scn, si = self.init_run(strategy, seed, scenario)
+            states.append(st)
+            scn_list.append(scn)
+            sidx.append(si)
+            # client shards/test set depend on (strategy, seed) only; keep
+            # one stacked row per unique pair (see _grid)
+            pair = (strategy, seed)
+            if pair not in data_row_of:
+                data_row_of[pair] = len(data_rows)
+                data_rows.append(da)
+            didx.append(data_row_of[pair])
+        stack = lambda *xs: jnp.stack(xs)
+        states = jax.tree_util.tree_map(stack, *states)
+        datas = jax.tree_util.tree_map(stack, *data_rows)
+        scns = stack_scenarios(scn_list)
+        strat_idx = jnp.asarray(sidx, jnp.int32)
+        data_idx = jnp.asarray(didx, jnp.int32)
+        flags = _eval_flags(rounds, eval_every)
+        _, metrics = self._grid_fn(states, datas, scns, strat_idx, data_idx, flags)
+        scenarios = list(scenarios)
+
+        def _label(sc):
+            return sc if isinstance(sc, str) else f"custom-{scenarios.index(sc)}"
+
+        labels = [(strategy, seed, _label(sc)) for strategy, seed, sc in runs]
+        return GridResult(metrics=metrics, runs=labels)
+
+    def run_single(
+        self,
+        strategy: str,
+        seed: int,
+        scenario: ScenarioLike = "ring",
+        rounds: int = 40,
+        eval_every: int = 1,
+    ) -> List[RoundRecord]:
+        """One experiment through the same scan program (grid of size 1)."""
+        result = self.run_grid(
+            seeds=(seed,), scenarios=(scenario,), rounds=rounds,
+            strategies=(strategy,), eval_every=eval_every,
+        )
+        return metrics_to_records(
+            jax.tree_util.tree_map(lambda x: x[0], result.metrics)
+        )

@@ -1,0 +1,384 @@
+"""Pure functional FL round core: one jitted program per round.
+
+This is the device-resident heart of the experiment engine.  The legacy
+``FLSimulation.run_round`` interleaved host numpy (``np.nonzero`` cohort
+gathers, ``ok.any()`` branching, python ``round()`` step counts) with jitted
+stages, forcing a host sync + dispatch every round.  Here the selector's
+four pipeline stages (fusion -> prediction -> clustering -> election), the
+cohort training, the realized-latency round economics and the FedAvg update
+are folded into a single pure function
+
+    round_step(state, scn, strategy_idx, data, do_eval) -> (state, metrics)
+
+with *fixed-size, mask-based* selection (no data-dependent shapes) and
+``jnp.where``/``lax.cond`` branching, so a whole experiment is one
+``lax.scan`` and a (strategy x seed x scenario) grid is one ``vmap`` of it
+(see ``repro.fl.engine``).  Strategies are traced via ``lax.switch`` over
+``STRATEGY_ORDER`` so the strategy axis vmaps like any other.
+
+Aggregation runs on the *flat* update layout through the Pallas
+``fedavg_reduce`` kernel (one HBM sweep of the (K, P) update matrix),
+rather than K pytree AXPYs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig, TrafficConfig
+from repro.core.fusion import fuse_messages
+from repro.core.messages import emit_cams, emit_cpms
+from repro.core.network import connectivity, latency_model
+from repro.core.rttg import build_rttg
+from repro.core.selection import STRATEGIES
+from repro.core.clustering import kmeans_cluster, update_sketch
+from repro.core.trajectory import predict_rttg
+from repro.core.twin import TrafficTwin, advance_twin
+from repro.fl.client import make_local_trainer
+from repro.fl.partition import make_test_set, partition_clients
+from repro.fl.server import apply_delta, normalized_weights
+from repro.kernels.ops import fedavg_reduce_auto
+from repro.sharding import split_params
+from repro.utils import fold_in_str, unflatten_from_vector
+
+# lax.switch branch order: the traced strategy axis indexes this tuple.
+STRATEGY_ORDER: Tuple[str, ...] = ("greedy", "gossip", "data", "network", "contextual")
+
+# Twin integration inside the round core splits every advance into this many
+# equal sub-steps (static trip count): under vmap no grid lane lock-steps on
+# the slowest lane's round duration, and the scan body stays while-loop-free.
+ADVANCE_SUBSTEPS = 15
+
+
+class RoundState(NamedTuple):
+    """Everything a round mutates, as one device-resident pytree."""
+
+    params: Any  # global model pytree
+    twin: TwinState  # ground-truth traffic state
+    sketches: jax.Array  # (N, sketch_dim) update sketches (stage 3)
+    sketch_age: jax.Array  # (N,) rounds since last report
+    clusters: jax.Array  # (N,) int32 data-cluster labels
+    round: jax.Array  # () int32 completed-round counter
+    sim_time: jax.Array  # () f32 cumulative simulated seconds
+    key: jax.Array  # per-experiment base PRNG key (never advanced)
+
+
+class RoundData(NamedTuple):
+    """Per-experiment constants: client shards + global test set."""
+
+    images: jax.Array  # (N, n, H, W, C)
+    labels: jax.Array  # (N, n)
+    test_x: jax.Array
+    test_y: jax.Array
+
+
+class RoundMetrics(NamedTuple):
+    """Per-round telemetry; scan stacks these along the rounds axis."""
+
+    round: jax.Array
+    sim_time: jax.Array
+    duration: jax.Array
+    n_selected: jax.Array
+    n_succeeded: jax.Array
+    mean_pred_latency: jax.Array
+    mean_real_latency: jax.Array
+    test_acc: jax.Array
+    test_loss: jax.Array
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Host-side view of one round (the legacy public record type)."""
+
+    round: int
+    sim_time: float  # cumulative simulated seconds at round END
+    duration: float
+    n_selected: int
+    n_succeeded: int
+    mean_pred_latency: float
+    mean_real_latency: float
+    test_acc: float
+    test_loss: float
+
+
+def cohort_size_for(fl: FLConfig, strategies: Sequence[str]) -> int:
+    """Static training-cohort width covering every strategy in the grid.
+
+    Greedy trains every connected client, so any grid containing it pays
+    the full-width cohort; the top-k strategies never exceed ``n_select``.
+    """
+    return fl.num_clients if "greedy" in strategies else fl.n_select
+
+
+def flat_spec_of(params) -> Any:
+    """Spec matching ``flatten_to_vector``'s layout, without materializing."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return (treedef, [x.shape for x in leaves], [x.dtype for x in leaves])
+
+
+def init_experiment(
+    api,
+    fl: FLConfig,
+    traffic_cfg: TrafficConfig,
+    dataset: str,
+    strategy: str,
+    key: jax.Array,
+) -> Tuple[RoundState, RoundData]:
+    """Build the initial state + data shard for one experiment (host-side)."""
+    assert fl.num_clients == traffic_cfg.num_vehicles, (
+        "every FL client is a CAV: num_clients must equal num_vehicles"
+    )
+    key = fold_in_str(key, f"fl-sim/{strategy}/{dataset}")
+    params, _ = split_params(api.init(fold_in_str(key, "model-init")))
+    twin_state = TrafficTwin(traffic_cfg, key).init_state()
+    # geographic non-iid: class ownership follows the home road region
+    # (scenes/scenarios are spatially correlated in C-ITS; DESIGN.md §9)
+    n_regions = 10
+    regions = jnp.floor(
+        twin_state.pos / traffic_cfg.ring_length_m * n_regions
+    ).astype(jnp.int32) % n_regions
+    images, labels = partition_clients(key, dataset, fl, regions)
+    test_x, test_y = make_test_set(key, dataset)
+    N = fl.num_clients
+    state = RoundState(
+        params=params,
+        twin=twin_state,
+        sketches=jnp.zeros((N, fl.sketch_dim), jnp.float32),
+        sketch_age=jnp.full((N,), jnp.inf, jnp.float32),
+        clusters=jnp.zeros((N,), jnp.int32),
+        round=jnp.zeros((), jnp.int32),
+        sim_time=jnp.zeros((), jnp.float32),
+        key=key,
+    )
+    return state, RoundData(images, labels, test_x, test_y)
+
+
+def make_warmup(loss_fn, fl: FLConfig):
+    """Deadline-rule bootstrap: every client reports one gradient sketch,
+    then the first clustering runs.  Pure: (state, data) -> state."""
+    one_step = make_local_trainer(loss_fn, fl.learning_rate, 1, fl.batch_size)
+
+    def warmup(state: RoundState, data: RoundData) -> RoundState:
+        bs = fl.batch_size
+        _, vecs = one_step(
+            state.params,
+            data.images[:, :bs],
+            data.labels[:, :bs],
+            fold_in_str(state.key, "warmup"),
+        )
+        k_sketch = fold_in_str(state.key, "selector")
+        sketches = jax.vmap(lambda v: update_sketch(v, k_sketch, fl.sketch_dim))(vecs)
+        k_km = fold_in_str(jax.random.fold_in(state.key, 0), "kmeans")
+        clusters, _ = kmeans_cluster(sketches, k_km, fl.num_clusters)
+        return state._replace(
+            sketches=sketches,
+            sketch_age=jnp.zeros_like(state.sketch_age),
+            clusters=clusters,
+        )
+
+    return warmup
+
+
+def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
+                    param_spec, strategies: Sequence[str] = STRATEGY_ORDER):
+    """Build the pure round transition for a fixed FL config.
+
+    Static arguments select the compiled program; ``scn`` (ScenarioParams or
+    TrafficConfig), ``strategy_idx`` and ``do_eval`` are traced so the same
+    program serves the whole grid.  ``strategy_idx`` indexes ``strategies``
+    (not the global order): a vmapped switch executes every branch for
+    every lane, so carrying only the grid's strategies matters.
+    """
+    strategies = tuple(strategies)
+    trainer = make_local_trainer(
+        loss_fn, fl.learning_rate, fl.local_epochs, fl.batch_size
+    )
+    n_select = fl.n_select
+    N, K = fl.num_clients, cohort_size
+    compute_s = fl.local_epochs * fl.compute_s_per_epoch
+    mb = jnp.asarray(model_bytes, jnp.float32)
+    nan = jnp.float32(jnp.nan)
+
+    def _eval(params, data):
+        m = loss_fn(params, {"images": data.test_x, "labels": data.test_y})[1]
+        return m["accuracy"].astype(jnp.float32), m["ce"].astype(jnp.float32)
+
+    def _elect(rttg, scn, clusters, k, strategy_idx):
+        """Stages 2+4: predict the future RTTG, then elect via lax.switch."""
+        future = predict_rttg(rttg, scn.predict_horizon_s, scn)
+        lat_pred = latency_model(future, mb, scn)
+        connected = connectivity(
+            future, scn, fl.connection_rate, fold_in_str(k, "cr")
+        )
+        branches = [
+            functools.partial(
+                lambda name, kk, conn, lat, cl: STRATEGIES[name](
+                    fold_in_str(kk, name), conn, lat, cl, n_select, fl.gamma
+                ),
+                name,
+            )
+            for name in strategies
+        ]
+        if len(branches) == 1:
+            mask = branches[0](k, connected, lat_pred, clusters)
+        else:
+            mask = jax.lax.switch(
+                strategy_idx, branches, k, connected, lat_pred, clusters
+            )
+        return mask, lat_pred
+
+    def round_step(state: RoundState, scn, strategy_idx, data: RoundData, do_eval):
+        rk = jax.random.fold_in(state.key, state.round)
+
+        # ---- stage 1: fuse CAM/CPM into the RTTG -----------------------
+        k_obs = fold_in_str(rk, "observe")
+        cams = emit_cams(state.twin, scn, k_obs)
+        cpms = emit_cpms(state.twin, scn, k_obs)
+        rttg = fuse_messages(cams, cpms, state.twin.t, scn)
+
+        # ---- stages 2+4: predict + elect -------------------------------
+        mask, lat_pred = _elect(rttg, scn, state.clusters, rk, strategy_idx)
+        n_selected = jnp.sum(mask).astype(jnp.int32)
+
+        # ---- fixed-size cohort gather ----------------------------------
+        # Selected client ids in ascending order fill the first slots; the
+        # rest are no-op padding (zeroed data + zeroed updates) — never a
+        # redundant retraining of client 0.
+        order = jnp.where(mask, jnp.arange(N), N + jnp.arange(N))
+        idx = jnp.sort(order)[:K]
+        slot_valid = idx < N
+        idx_c = jnp.where(slot_valid, idx, 0)
+
+        dmask = slot_valid.reshape((K,) + (1,) * (data.images.ndim - 1))
+        imgs = data.images[idx_c] * dmask
+        lbls = jnp.where(slot_valid[:, None], data.labels[idx_c], 0)
+        _, vecs = trainer(state.params, imgs, lbls, fold_in_str(rk, "local"))
+        vecs = vecs * slot_valid[:, None]
+
+        # ---- realized round economics on the TRUE evolved topology -----
+        compute_i = compute_s * state.twin.compute_factor[idx_c]
+        nsel_f = jnp.maximum(n_selected.astype(jnp.float32), 1.0)
+        mean_compute = jnp.sum(jnp.where(slot_valid, compute_i, 0.0)) / nsel_f
+        mid_twin = advance_twin(
+            state.twin, scn, fold_in_str(rk, "mid"), mean_compute,
+            num_substeps=ADVANCE_SUBSTEPS,
+        )
+        mid_rttg = build_rttg(
+            mid_twin.t, mid_twin.pos, mid_twin.speed, mid_twin.accel,
+            jnp.zeros_like(mid_twin.pos), scn,
+        )
+        real_lat = latency_model(mid_rttg, mb, scn)
+        still_conn = connectivity(
+            mid_rttg, scn, fl.connection_rate, fold_in_str(rk, "upload-cr")
+        )
+        ok = slot_valid & still_conn[idx_c]
+        ok_any = jnp.any(ok)
+        timeout = jnp.float32(fl.round_timeout_s)
+        per_slot = real_lat[idx_c] + compute_i
+        # a selected client that missed the deadline costs the full timeout;
+        # padding slots must not contribute to the round maximum
+        slot_pay = jnp.where(ok, per_slot, timeout)
+        dur_core = jnp.max(jnp.where(slot_valid, slot_pay, -jnp.inf))
+        duration = jnp.where(
+            n_selected > 0, dur_core + fl.server_agg_s, timeout
+        )
+
+        # ---- FedAvg over deadline survivors (Pallas flat reduction) ----
+        # wider P-blocks for small cohorts: same VMEM budget (K*block_p*4B),
+        # 4x fewer grid steps over the flat update matrix
+        block_p = 8192 if K <= 64 else 2048
+        w = normalized_weights(ok, jnp.full((K,), fl.samples_per_client, jnp.float32))
+        delta = unflatten_from_vector(
+            fedavg_reduce_auto(vecs, w, block_p=block_p), param_spec
+        )
+        agg = apply_delta(state.params, delta)
+        params = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(ok_any, new, old), agg, state.params
+        )
+
+        # ---- deadline rule: survivors report sketches ------------------
+        k_sketch = fold_in_str(state.key, "selector")
+        sks = jax.vmap(lambda v: update_sketch(v, k_sketch, fl.sketch_dim))(vecs)
+        scatter = jnp.where(ok, idx_c, N)  # out-of-bounds rows drop
+        sketches = state.sketches.at[scatter].set(sks, mode="drop")
+        sketch_age = state.sketch_age.at[scatter].set(0.0, mode="drop") + 1.0
+
+        # ---- advance the twin to round end -----------------------------
+        base = jax.tree_util.tree_map(
+            lambda m, o: jnp.where(ok_any, m, o), mid_twin, state.twin
+        )
+        already = jnp.where(ok_any, mean_compute, 0.0)
+        rem = jnp.maximum(duration - already, 1e-3)
+        twin = advance_twin(
+            base, scn, fold_in_str(rk, "adv"), rem, num_substeps=ADVANCE_SUBSTEPS
+        )
+
+        # ---- end of round: recluster on schedule, strided eval ---------
+        new_round = state.round + 1
+        k_km = fold_in_str(jax.random.fold_in(state.key, new_round), "kmeans")
+        clusters = jax.lax.cond(
+            new_round % max(fl.recluster_every, 1) == 0,
+            lambda: kmeans_cluster(sketches, k_km, fl.num_clusters)[0],
+            lambda: state.clusters,
+        )
+        sim_time = state.sim_time + duration
+        test_acc, test_loss = jax.lax.cond(
+            do_eval, lambda p: _eval(p, data), lambda p: (nan, nan), params
+        )
+
+        metrics = RoundMetrics(
+            round=new_round,
+            sim_time=sim_time,
+            duration=duration,
+            n_selected=n_selected,
+            n_succeeded=jnp.sum(ok).astype(jnp.int32),
+            mean_pred_latency=jnp.where(
+                n_selected > 0, jnp.sum(jnp.where(mask, lat_pred, 0.0)) / nsel_f, nan
+            ),
+            mean_real_latency=jnp.where(
+                n_selected > 0,
+                jnp.sum(jnp.where(slot_valid, real_lat[idx_c], 0.0)) / nsel_f,
+                nan,
+            ),
+            test_acc=test_acc,
+            test_loss=test_loss,
+        )
+        new_state = state._replace(
+            params=params,
+            twin=twin,
+            sketches=sketches,
+            sketch_age=sketch_age,
+            clusters=clusters,
+            round=new_round,
+            sim_time=sim_time,
+        )
+        return new_state, metrics
+
+    return round_step
+
+
+def metrics_to_records(metrics: RoundMetrics) -> list:
+    """Convert stacked (T,) RoundMetrics into host RoundRecords."""
+    import numpy as np
+
+    m = jax.tree_util.tree_map(np.asarray, metrics)
+    out = []
+    for i in range(m.round.shape[0]):
+        out.append(
+            RoundRecord(
+                round=int(m.round[i]),
+                sim_time=float(m.sim_time[i]),
+                duration=float(m.duration[i]),
+                n_selected=int(m.n_selected[i]),
+                n_succeeded=int(m.n_succeeded[i]),
+                mean_pred_latency=float(m.mean_pred_latency[i]),
+                mean_real_latency=float(m.mean_real_latency[i]),
+                test_acc=float(m.test_acc[i]),
+                test_loss=float(m.test_loss[i]),
+            )
+        )
+    return out

@@ -13,6 +13,19 @@ import jax.numpy as jnp
 from repro.utils import tree_weighted_sum
 
 
+def apply_delta(global_params, delta):
+    """global <- global + delta with fp32 accumulation, dtype-preserving.
+
+    The single update rule shared by the pytree path below and the flat
+    Pallas path in ``repro.fl.rounds`` — keep them in lockstep.
+    """
+    return jax.tree_util.tree_map(
+        lambda p, d: (p.astype(jnp.float32) + d.astype(jnp.float32)).astype(p.dtype),
+        global_params,
+        delta,
+    )
+
+
 @jax.jit
 def fedavg_aggregate(global_params, updates, weights):
     """global <- global + sum_k w_k * update_k  (weights already normalized).
@@ -20,12 +33,7 @@ def fedavg_aggregate(global_params, updates, weights):
     updates: pytree with leading cohort axis K; weights: (K,) summing to 1
     over the *selected* clients (de-selected slots carry weight 0).
     """
-    delta = tree_weighted_sum(updates, weights)
-    return jax.tree_util.tree_map(
-        lambda p, d: (p.astype(jnp.float32) + d.astype(jnp.float32)).astype(p.dtype),
-        global_params,
-        delta,
-    )
+    return apply_delta(global_params, tree_weighted_sum(updates, weights))
 
 
 def normalized_weights(mask_selected: jax.Array, n_samples: jax.Array) -> jax.Array:

@@ -1,4 +1,4 @@
-"""FL-over-C-ITS simulation: the paper's experimental harness.
+"""FL-over-C-ITS simulation: the paper's experimental harness (legacy API).
 
 Couples the traffic digital twin, the V2X selection pipeline and the FL
 runtime into one reproducible loop.  Time is *simulated vehicular
@@ -10,44 +10,35 @@ with realized latencies computed from the twin's TRUE state at upload time
 (the selector only ever saw the fused/predicted RTTG — prediction error is
 therefore part of the experiment, as in the paper).  Clients that lost
 connectivity by upload time miss the round deadline: their updates are
-dropped and the round pays the timeout — the straggler effect that greedy /
-gossip selection suffers from.
+dropped and the round pays the timeout (``FLConfig.round_timeout_s``) — the
+straggler effect that greedy / gossip selection suffers from.
+
+``FLSimulation`` is now a thin host-side wrapper over the pure functional
+round core (``repro.fl.rounds.round_step``) that also powers the batched
+scan engine (``repro.fl.engine``): one jitted call per round, with the
+round record materialized on the host.  Whole-grid sweeps should use the
+engine directly — it runs every round of every experiment device-resident.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
-from repro.core import ContextualSelector, TrafficTwin
-from repro.core.network import connectivity, latency_model
-from repro.core.rttg import build_rttg
-from repro.fl.client import make_local_trainer
-from repro.fl.partition import make_test_set, partition_clients
-from repro.fl.server import fedavg_aggregate, normalized_weights
+from repro.core.scenarios import scenario_params
+from repro.fl.rounds import (
+    RoundRecord,
+    cohort_size_for,
+    flat_spec_of,
+    init_experiment,
+    make_round_step,
+    make_warmup,
+    metrics_to_records,
+)
 from repro.models import build_model
-from repro.sharding import split_params
-from repro.utils import fold_in_str, tree_bytes
-
-TIMEOUT_S = 15.0
-
-
-@dataclasses.dataclass
-class RoundRecord:
-    round: int
-    sim_time: float  # cumulative simulated seconds at round END
-    duration: float
-    n_selected: int
-    n_succeeded: int
-    mean_pred_latency: float
-    mean_real_latency: float
-    test_acc: float
-    test_loss: float
+from repro.utils import tree_bytes
 
 
 class FLSimulation:
@@ -60,161 +51,53 @@ class FLSimulation:
         strategy: str,
         key: jax.Array,
     ):
-        assert fl_cfg.num_clients == traffic_cfg.num_vehicles, (
-            "every FL client is a CAV: num_clients must equal num_vehicles"
-        )
         self.fl, self.traffic, self.strategy = fl_cfg, traffic_cfg, strategy
-        self.key = fold_in_str(key, f"fl-sim/{strategy}/{dataset}")
         self.api = build_model(model_cfg)
-        params_p = self.api.init(fold_in_str(self.key, "model-init"))
-        self.params, _ = split_params(params_p)
-        self.model_bytes = float(tree_bytes(self.params))
-
-        self.twin = TrafficTwin(traffic_cfg, self.key)
-        self.twin_state = self.twin.init_state()
-        # geographic non-iid: class ownership follows the home road region
-        # (scenes/scenarios are spatially correlated in C-ITS; DESIGN.md §9)
-        n_regions = 10
-        regions = jnp.floor(
-            self.twin_state.pos / traffic_cfg.ring_length_m * n_regions
-        ).astype(jnp.int32) % n_regions
-        self.images, self.labels = partition_clients(self.key, dataset, fl_cfg, regions)
-        self.test_x, self.test_y = make_test_set(self.key, dataset)
-        self.selector = ContextualSelector(fl_cfg, traffic_cfg, self.key)
-
-        self.trainer = make_local_trainer(
-            self.api.loss, fl_cfg.learning_rate, fl_cfg.local_epochs, fl_cfg.batch_size
+        self.state, self.data = init_experiment(
+            self.api, fl_cfg, traffic_cfg, dataset, strategy, key
         )
-        self._eval = jax.jit(lambda p, x, y: self.api.loss(p, {"images": x, "labels": y})[1])
-        self.sim_time = 0.0
-        self._round = 0
-        self.compute_s = fl_cfg.local_epochs * fl_cfg.compute_s_per_epoch
-
-        tc, mb, cr = traffic_cfg, self.model_bytes, fl_cfg.connection_rate
-
-        @jax.jit
-        def _realized(state, k):
-            rttg = build_rttg(
-                state.t, state.pos, state.speed, state.accel,
-                jnp.zeros_like(state.pos), tc,
+        self.key = self.state.key
+        self.model_bytes = float(tree_bytes(self.state.params))
+        self._scn = scenario_params(traffic_cfg)
+        self._strategy_idx = jnp.zeros((), jnp.int32)  # sole branch
+        self._step = jax.jit(
+            make_round_step(
+                self.api.loss,
+                fl_cfg,
+                cohort_size_for(fl_cfg, (strategy,)),
+                self.model_bytes,
+                flat_spec_of(self.state.params),
+                strategies=(strategy,),
             )
-            return (
-                latency_model(rttg, mb, tc),
-                connectivity(rttg, tc, cr, k),
-            )
+        )
+        self._warmup = jax.jit(make_warmup(self.api.loss, fl_cfg))
 
-        self._realized_jit = _realized
+    # -- convenience views over the functional state -----------------------
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def twin_state(self):
+        return self.state.twin
+
+    @property
+    def sim_time(self) -> float:
+        return float(self.state.sim_time)
 
     # ------------------------------------------------------------------
-    def warmup_sketches(self, chunk: int = 25):
+    def warmup_sketches(self):
         """Deadline rule bootstrap: every client reports one gradient sketch."""
-        N = self.fl.num_clients
-        one_step = make_local_trainer(
-            self.api.loss, self.fl.learning_rate, 1, self.fl.batch_size
-        )
-        for lo in range(0, N, chunk):
-            hi = min(lo + chunk, N)
-            _, vecs = one_step(
-                self.params,
-                self.images[lo:hi, : self.fl.batch_size],
-                self.labels[lo:hi, : self.fl.batch_size],
-                fold_in_str(self.key, f"warmup/{lo}"),
-            )
-            self.selector.report_updates(jnp.arange(lo, hi), vecs)
-        self.selector.recluster()
+        self.state = self._warmup(self.state, self.data)
 
     # ------------------------------------------------------------------
-    def _true_rttg(self, state):
-        return build_rttg(
-            state.t, state.pos, state.speed, state.accel,
-            jnp.zeros_like(state.pos), self.traffic,
-        )
-
     def run_round(self) -> RoundRecord:
-        fl = self.fl
-        rk = jax.random.fold_in(self.key, self._round)
-
-        # stages 1-4: observe, predict, (re)cluster, select
-        self.selector.observe(self.twin_state)
-        sel = self.selector.select(self.strategy, self.model_bytes)
-        mask = np.asarray(sel["mask"])
-        idx = np.nonzero(mask)[0]
-        n_selected = int(idx.size)
-
-        if n_selected == 0:
-            duration = TIMEOUT_S
-            self._advance(duration, rk)
-            return self._record(duration, 0, 0, sel, np.zeros(()))
-
-        # cohort training (vmapped SPMD program)
-        K = fl.num_clients if self.strategy == "greedy" else max(
-            int(round(fl.select_fraction * fl.num_clients)), 1
+        """One round = one jitted call to the shared pure core + host sync."""
+        self.state, metrics = self._step(
+            self.state, self._scn, self._strategy_idx, self.data, True
         )
-        K = max(K, n_selected)
-        pad = np.zeros(K, np.int64)
-        pad[:n_selected] = idx
-        pad_idx = jnp.asarray(pad)
-        updates, vecs = self.trainer(
-            self.params,
-            self.images[pad_idx],
-            self.labels[pad_idx],
-            fold_in_str(rk, "local"),
-        )
-
-        # realized round economics: compute, then upload against the TRUE
-        # (evolved) topology
-        compute_i = self.compute_s * np.asarray(self.twin_state.compute_factor)[idx]
-        mid_state = self.twin.advance(
-            self.twin_state, fold_in_str(rk, "mid"), float(np.mean(compute_i))
-        )
-        lat_j, conn_j = self._realized_jit(mid_state, fold_in_str(rk, "upload-cr"))
-        real_lat, still_conn = np.asarray(lat_j), np.asarray(conn_j)
-        ok = still_conn[idx]
-        per_client = real_lat[idx] + compute_i
-        if ok.any():
-            duration = float(np.max(np.where(ok, per_client, TIMEOUT_S)))
-        else:
-            duration = TIMEOUT_S
-        duration += fl.server_agg_s
-
-        # FedAvg over clients that made the deadline
-        sel_mask_pad = np.zeros(K, bool)
-        sel_mask_pad[:n_selected] = ok
-        w = normalized_weights(jnp.asarray(sel_mask_pad), jnp.full((K,), fl.samples_per_client))
-        if ok.any():
-            self.params = fedavg_aggregate(self.params, updates, w)
-            # deadline rule: survivors report sketches for the next clustering
-            ok_ids = pad_idx[np.nonzero(sel_mask_pad)[0]]
-            self.selector.report_updates(ok_ids, vecs[jnp.asarray(np.nonzero(sel_mask_pad)[0])])
-
-        self._advance(duration, rk, already=mid_state if ok.any() else None,
-                      already_s=float(np.mean(compute_i)) if ok.any() else 0.0)
-        return self._record(duration, n_selected, int(ok.sum()), sel, real_lat[idx])
-
-    # ------------------------------------------------------------------
-    def _advance(self, duration, rk, already=None, already_s=0.0):
-        base = already if already is not None else self.twin_state
-        rem = max(duration - already_s, 1e-3)
-        self.twin_state = self.twin.advance(base, fold_in_str(rk, "adv"), rem)
-        self.sim_time += duration
-        self.selector.end_round()
-        self._round += 1
-
-    def _record(self, duration, n_sel, n_ok, sel, real_lat) -> RoundRecord:
-        metrics = self._eval(self.params, self.test_x, self.test_y)
-        lat_pred = np.asarray(sel["latency_pred"])
-        msk = np.asarray(sel["mask"])
-        return RoundRecord(
-            round=self._round,
-            sim_time=self.sim_time,
-            duration=duration,
-            n_selected=n_sel,
-            n_succeeded=n_ok,
-            mean_pred_latency=float(lat_pred[msk].mean()) if msk.any() else float("nan"),
-            mean_real_latency=float(np.mean(real_lat)) if n_sel else float("nan"),
-            test_acc=float(metrics["accuracy"]),
-            test_loss=float(metrics["ce"]),
-        )
+        one = jax.tree_util.tree_map(lambda x: x[None], metrics)
+        return metrics_to_records(one)[0]
 
     # ------------------------------------------------------------------
     def run(self, num_rounds: int, time_budget_s: Optional[float] = None,
@@ -230,7 +113,7 @@ class FLSimulation:
                     f"dur={rec.duration:6.2f}s sel={rec.n_selected}/{rec.n_succeeded} "
                     f"acc={rec.test_acc:.3f}"
                 )
-            if time_budget_s is not None and self.sim_time >= time_budget_s:
+            if time_budget_s is not None and rec.sim_time >= time_budget_s:
                 break
         return history
 

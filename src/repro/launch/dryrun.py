@@ -168,6 +168,8 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool):
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     trips = scope_trip_counts(cfg, shape)
     stats = parse_hlo(hlo, trips)  # trip-weighted (cost_analysis counts scan bodies once)

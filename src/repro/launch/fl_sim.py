@@ -13,9 +13,10 @@ import os
 
 import jax
 
-from repro.config import FLConfig, TrafficConfig
+from repro.config import FLConfig
 from repro.configs import get_config
 from repro.configs.paper_models import PAPER_MODEL_BY_DATASET
+from repro.core.scenarios import SCENARIOS, scenario_config
 from repro.core.selection import STRATEGIES
 from repro.fl.simulation import FLSimulation, time_to_accuracy
 
@@ -33,6 +34,7 @@ def run_experiment(
     time_budget_s: float | None = None,
     verbose: bool = False,
     predict_horizon_s: float | None = None,
+    scenario: str = "ring",
 ):
     model_cfg = get_config(PAPER_MODEL_BY_DATASET[dataset])
     # paper §IV-A: 3 local epochs on MNIST, 1 on CIFAR-10/SVHN
@@ -46,7 +48,7 @@ def run_experiment(
         num_clusters=10,
         seed=seed,
     )
-    tr = TrafficConfig(num_vehicles=num_clients)
+    tr = scenario_config(scenario, num_vehicles=num_clients)
     if predict_horizon_s is not None:
         # ablation: horizon ~0 selects on the CURRENT fused RTTG (stage 2 off)
         tr = dataclasses.replace(tr, predict_horizon_s=predict_horizon_s)
@@ -56,6 +58,7 @@ def run_experiment(
         "dataset": dataset,
         "strategy": strategy,
         "connection_rate": connection_rate,
+        "scenario": scenario,
         "classes_per_client": classes_per_client,
         "num_clients": num_clients,
         "seed": seed,
@@ -70,6 +73,7 @@ def main():
     ap.add_argument("--strategy", default="contextual", choices=sorted(STRATEGIES))
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--connection-rate", type=float, default=1.0)
+    ap.add_argument("--scenario", default="ring", choices=sorted(SCENARIOS))
     ap.add_argument("--classes-per-client", type=int, default=2)
     ap.add_argument("--num-clients", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,6 +86,7 @@ def main():
         args.dataset, args.strategy, args.rounds, args.connection_rate,
         args.classes_per_client, args.num_clients, args.seed,
         time_budget_s=args.time_budget, verbose=not args.quiet,
+        scenario=args.scenario,
     )
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

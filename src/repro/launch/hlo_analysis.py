@@ -40,7 +40,12 @@ COLLECTIVES = (
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
 _RESULT_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^\s]+)\s+([\w\-]+)\(")
-_DOT_OPERANDS_RE = re.compile(r"\sdot\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)")
+# lhs operand of a dot; newer XLA text inlines the operand type
+# (``dot(f32[8,32]{1,0} %lhs, ...)``, possibly with a tiled layout such as
+# ``{1,0:T(8,128)}``), older prints bare names
+_DOT_OPERANDS_RE = re.compile(
+    r"\sdot\(\s*(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+)"
+)
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
@@ -129,7 +134,7 @@ def parse_hlo(hlo_text: str, scope_trips: Dict[str, float] | None = None) -> Hlo
             mo = _DOT_OPERANDS_RE.search(line)
             k = 1
             if mo:
-                ldims = shapes.get(mo.group(1), [])
+                ldims = _dims(mo.group(1)) if mo.group(1) else shapes.get(mo.group(2), [])
                 cd = _CDIMS_RE.search(line)
                 if cd and ldims:
                     for i in cd.group(1).split(","):

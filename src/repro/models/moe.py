@@ -39,6 +39,15 @@ try:  # jax >= 0.6 exposes shard_map at the top level
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+import inspect as _inspect
+
+# the replication-check kwarg was renamed check_rep -> check_vma in jax 0.6
+_SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else {"check_rep": False}
+)
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
@@ -215,6 +224,6 @@ def _moe_shard_map(p, x, cfg, mesh, capacity_factor: float = 1.25):
         mesh=mesh,
         in_specs=(P(None, None), wg_spec, wg_spec, wd_spec, batch_spec),
         out_specs=(batch_spec, P()),
-        check_vma=False,
+        **_SHARD_MAP_NO_CHECK,
     )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
     return y, aux

@@ -1,0 +1,89 @@
+"""Tiny deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container this repo targets has no ``hypothesis`` wheel; rather than
+skip the property tests entirely, this shim re-implements the minimal API
+surface the test suite uses (``given``/``settings`` plus the ``integers``,
+``floats``, ``lists`` and ``sampled_from`` strategies) as a seeded random
+sampler.  It is NOT a replacement for hypothesis — no shrinking, no edge
+cases beyond the bounds themselves — but it executes the same properties on
+``max_examples`` deterministic draws.  Install ``hypothesis`` (see
+requirements-dev.txt) to get the real thing; these tests import it
+preferentially.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_SEED = 0xC175  # deterministic across runs; any fixed value works
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    # always include the endpoints among the draws via a biased first choice
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return min_value
+        if r < 0.10:
+            return max_value
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _lists(elements, min_size=0, max_size=10):
+    return _Strategy(
+        lambda rng: [elements.draw(rng) for _ in range(rng.randint(min_size, max_size))]
+    )
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    lists=_lists,
+)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Records ``max_examples`` on the (already-)wrapped test function."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Runs the test body on ``max_examples`` deterministic draws."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # deliberately NOT functools.wraps: pytest must see the wrapper's
+        # empty signature, not the drawn parameters (they are not fixtures)
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+
+    return deco

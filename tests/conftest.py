@@ -3,6 +3,9 @@ import sys
 
 # src layout import path (tests run from the repo root, no install needed)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the tests dir itself, so `import _hypothesis_fallback` resolves regardless
+# of how pytest was invoked
+sys.path.insert(0, os.path.dirname(__file__))
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device;
 # only launch/dryrun.py forces 512 placeholder devices (system requirement).

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
 from repro.fl.client import make_local_trainer

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.selection import STRATEGIES, select_clients
 

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 from jax.sharding import AbstractMesh, PartitionSpec
 
 from repro.sharding import (
@@ -13,8 +16,15 @@ from repro.sharding import (
     split_params,
 )
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(shape, names):
+    try:  # jax >= 0.5 signature: (axis_sizes, axis_names)
+        return AbstractMesh(shape, names)
+    except TypeError:  # jax 0.4.x signature: one ((name, size), ...) tuple
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+MESH1 = _abstract_mesh((16, 16), ("data", "model"))
+MESH2 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_resolution():
