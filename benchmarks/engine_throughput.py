@@ -1,12 +1,16 @@
-"""Engine throughput: batched (vmapped-scan) vs serial legacy FL rounds.
+"""Engine throughput: sharded vs batched (vmapped-scan) vs serial FL rounds.
 
 Claim under test: running a (strategy x seed x scenario) grid as ONE
 device-resident program (``repro.fl.engine``) sustains >= 3x the rounds/sec
 of the serial legacy loop (one ``FLSimulation`` per grid point, one jitted
-dispatch + host sync per round, eval every round) on the same grid.  The
-speedup comes from (a) zero per-round host round-trips, (b) one compile for
-the whole grid instead of one per experiment, and (c) test-set eval hoisted
-to a strided ``lax.cond``.
+dispatch + host sync per round, eval every round) on the same grid; and
+sharding that program's grid axis over a device mesh (``mesh=``) matches
+the vmapped baseline on one device (it falls back to the identical program)
+and scales it on multi-device hosts (each device sweeps its slice of rows).
+
+The grid spans the full scenario catalog — steady densities plus the
+``rush_hour`` and ``rsu_outage`` families — exercising the traced schedule /
+outage leaves under both executions.
 
 Each path runs the grid TWICE: the cold sweep pays compilation, the steady
 sweep is the amortized regime a real campaign (fig3 + table1 + fig4 share
@@ -24,8 +28,8 @@ import jax
 from benchmarks.common import cached
 
 STRATEGIES = ("contextual", "gossip")
-SEEDS = (0, 1, 2, 3)
-SCENARIOS = ("ring", "highway", "urban_grid")
+SEEDS = (0, 1)
+SCENARIOS = ("ring", "highway", "urban_grid", "rush_hour", "rsu_outage")
 ROUNDS = 5
 EVAL_EVERY = 5
 
@@ -40,29 +44,59 @@ def _grid_cfgs(num_clients, samples):
     return model, fl
 
 
+def _timed(sweep) -> float:
+    t0 = time.perf_counter()
+    sweep()
+    return time.perf_counter() - t0
+
+
 def _run(num_clients=20, samples=64):
     from repro.core.scenarios import scenario_config
     from repro.fl.engine import ExperimentEngine
     from repro.fl.simulation import FLSimulation
+    from repro.launch.mesh import make_grid_mesh
 
     model, fl = _grid_cfgs(num_clients, samples)
     grid = [(st, se, sc) for st in STRATEGIES for se in SEEDS for sc in SCENARIOS]
     n_rounds_total = len(grid) * ROUNDS
 
+    def grid_sweep(eng):
+        def sweep():
+            res = eng.run_grid(seeds=SEEDS, scenarios=SCENARIOS, rounds=ROUNDS,
+                               eval_every=EVAL_EVERY)
+            jax.block_until_ready(res.metrics)
+        return sweep
+
     # ---- batched: one vmapped scan program over the whole grid ----------
+    # ---- sharded: the same program with the grid axis over the mesh -----
+    # (on a 1-device host grid_shards()==1 and this IS the vmapped program)
+    # Cold sweeps (compile) run first for BOTH engines, then the steady
+    # sweeps alternate and keep the per-path minimum: process-global warmup
+    # (eager-op program caches, thread pools) otherwise flatters whichever
+    # path happens to run last.
     eng = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES)
-
-    def batched_sweep():
-        res = eng.run_grid(seeds=SEEDS, scenarios=SCENARIOS, rounds=ROUNDS,
-                           eval_every=EVAL_EVERY)
-        jax.block_until_ready(res.metrics)
-
-    t0 = time.perf_counter()
-    batched_sweep()
-    t_batched_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    batched_sweep()
-    t_batched = time.perf_counter() - t0
+    eng_sh = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES,
+                              mesh=make_grid_mesh())
+    sweep_b, sweep_sh = grid_sweep(eng), grid_sweep(eng_sh)
+    t_batched_cold = _timed(sweep_b)
+    t_sharded_cold = _timed(sweep_sh)
+    # Host contention on this box DRIFTS over the multi-minute run (sweep
+    # times vary ~2x), so unpaired mins mis-rank two identical programs.
+    # Measure PAIRED: each rep times the two paths back-to-back (drift
+    # between adjacent sweeps is small), order alternating so neither path
+    # systematically runs later; the sharded/batched comparison is the
+    # median of per-rep ratios, which cancels the common drift factor.
+    tb, tsh, ratios = [], [], []
+    for rep in range(4):
+        first, second = (sweep_b, sweep_sh) if rep % 2 == 0 else (sweep_sh, sweep_b)
+        ta, tc = _timed(first), _timed(second)
+        b, sh = (ta, tc) if rep % 2 == 0 else (tc, ta)
+        tb.append(b)
+        tsh.append(sh)
+        ratios.append(b / sh)
+    t_batched, t_sharded = min(tb), min(tsh)
+    ratios.sort()
+    sharded_vs_batched = 0.5 * (ratios[1] + ratios[2])  # median of 4
 
     # ---- serial legacy loop on the same grid ----------------------------
     def serial_sweep():
@@ -72,35 +106,45 @@ def _run(num_clients=20, samples=64):
                                "mnist", strategy, jax.random.key(seed))
             sim.run(ROUNDS)
 
-    t0 = time.perf_counter()
-    serial_sweep()
-    t_serial_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    serial_sweep()
-    t_serial = time.perf_counter() - t0
+    # the serial loop is too slow to sample 4x; time 2 steady sweeps and
+    # compare against the engines' first 2 reps so the headline speedup
+    # uses the same sample count on both sides (min-of-N under drifting
+    # contention otherwise favors the more-sampled path)
+    t_serial_cold = _timed(serial_sweep)
+    t_serial = min(_timed(serial_sweep) for _ in range(2))
 
     return {
         "grid": len(grid),
         "rounds_per_experiment": ROUNDS,
         "total_rounds": n_rounds_total,
+        "n_devices": len(jax.devices()),
+        "grid_shards": eng_sh.grid_shards(),
         "batched_cold_s": t_batched_cold,
+        "sharded_cold_s": t_sharded_cold,
         "serial_cold_s": t_serial_cold,
         "batched_s": t_batched,
+        "sharded_s": t_sharded,
         "serial_s": t_serial,
         "batched_rounds_per_s": n_rounds_total / t_batched,
+        "sharded_rounds_per_s": n_rounds_total / t_sharded,
         "serial_rounds_per_s": n_rounds_total / t_serial,
         "speedup_cold": t_serial_cold / t_batched_cold,
-        "speedup": t_serial / t_batched,
+        "speedup": t_serial / min(tb[:2]),  # 2 steady samples each side
+        "sharded_vs_batched": sharded_vs_batched,
     }
 
 
 def main(num_clients=20, samples=64):
-    r = cached(f"engine_throughput_c{num_clients}_s{samples}",
+    ndev = len(jax.devices())
+    r = cached(f"engine_throughput_c{num_clients}_s{samples}_d{ndev}",
                lambda: _run(num_clients, samples))
     print(f"engine,grid={r['grid']}x{r['rounds_per_experiment']}r,"
+          f"devices={r['n_devices']},shards={r['grid_shards']},"
           f"batched={r['batched_rounds_per_s']:.2f}r/s,"
+          f"sharded={r['sharded_rounds_per_s']:.2f}r/s,"
           f"serial={r['serial_rounds_per_s']:.2f}r/s,"
           f"speedup={r['speedup']:.2f}x,"
+          f"sharded_vs_batched={r['sharded_vs_batched']:.2f}x,"
           f"cold_speedup={r['speedup_cold']:.2f}x")
     return r
 

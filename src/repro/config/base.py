@@ -248,6 +248,10 @@ class TrafficConfig:
     overhead_bytes: int = 2_048
     sim_dt_s: float = 0.1
     predict_horizon_s: float = 5.0
+    # scenario dynamics (core/scenarios.py families; all traced per-scenario)
+    rush_amp: float = 0.0  # peak congestion amplitude (0 = steady density)
+    rush_period_s: float = 900.0  # commuter-wave period for rush_hour
+    rsu_outage_frac: float = 0.0  # fraction of RSUs dark (masked attachment)
 
 
 @dataclass(frozen=True)

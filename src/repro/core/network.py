@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import TrafficConfig
-from repro.core.rttg import RTTG
+from repro.core.rttg import RTTG, congestion_factor
 
 _C = 299_792_458.0
 
@@ -52,13 +52,16 @@ def latency_model(rttg: RTTG, model_bytes, cfg: TrafficConfig) -> jax.Array:
     """
     snr = snr_db(rttg, cfg)
     snr_lin = jnp.power(10.0, snr / 10.0)
+    # rush-hour density multiplies effective contention on the shared RSU
+    # (background CAM/CPM traffic scales with density, not just FL uploads)
+    load = rttg.load * congestion_factor(rttg.t, cfg)
     # per-RSU bandwidth shared by attached vehicles (uplink ~= downlink here)
-    rate = cfg.bandwidth_hz / jnp.maximum(rttg.load, 1.0) * jnp.log2(1.0 + snr_lin)
+    rate = cfg.bandwidth_hz / jnp.maximum(load, 1.0) * jnp.log2(1.0 + snr_lin)
     rate = jnp.maximum(rate, 1e4)  # 10 kb/s floor avoids infs off-coverage
     payload_bits = 8.0 * (jnp.asarray(model_bytes, jnp.float32) + cfg.overhead_bytes)
     t_air = 2.0 * payload_bits / rate  # up + down
     t_prop = 2.0 * rttg.rsu_dist / _C + 2.0 * cfg.backhaul_s
-    t_queue = cfg.queue_s_per_vehicle * rttg.load
+    t_queue = cfg.queue_s_per_vehicle * load
     # cell-edge handover penalty grows with speed near the RSU boundary
     edge = rttg.rsu_dist / (0.5 * cfg.rsu_spacing_m)  # ~1 at the cell edge
     t_handover = 0.2 * jnp.clip(edge - 0.7, 0.0, 1.0) * rttg.speed / cfg.mean_speed_mps

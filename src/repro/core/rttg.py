@@ -34,6 +34,43 @@ def _ring_dist(a, b, length):
     return jnp.minimum(d, length - d)
 
 
+def congestion_factor(t, cfg) -> jax.Array:
+    """Time-varying density multiplier >= 1 (the rush_hour family).
+
+    A commuter wave: ``1 + rush_amp * sin^2(pi t / rush_period_s)`` peaks
+    mid-period and returns to free flow at the period boundaries.  With
+    ``rush_amp == 0`` (every steady-density scenario) the factor is exactly
+    1.0, so steady scenarios are bit-identical to the pre-schedule model.
+    ``cfg`` may be a concrete ``TrafficConfig`` or a traced
+    ``ScenarioParams``; both carry the schedule fields as (possibly traced)
+    leaves, which is what lets one compiled grid program sweep rush-hour
+    and steady scenarios side by side.
+    """
+    amp = getattr(cfg, "rush_amp", 0.0)
+    period = getattr(cfg, "rush_period_s", 900.0)
+    phase = jnp.sin(
+        jnp.pi * jnp.asarray(t, jnp.float32) / jnp.maximum(period, 1e-3)
+    )
+    return 1.0 + amp * phase * phase
+
+
+def rsu_up_mask(cfg) -> jax.Array:
+    """(n_rsu,) bool availability mask (the rsu_outage family).
+
+    RSUs whose index center ``(i + 0.5) / n_rsu`` falls inside the first
+    ``rsu_outage_frac`` of the ring are dark (``round(frac * n_rsu)`` of
+    them) — a contiguous corridor outage, the worst case for geographic
+    non-iid selection (every client whose home region loses coverage must
+    attach far away or drop).  The *count* of RSUs stays static (it sets
+    array shapes); only which ones answer is traced, so outage severity
+    sweeps inside one compiled grid program.
+    """
+    n_rsu = n_rsu_of(cfg)
+    frac = getattr(cfg, "rsu_outage_frac", 0.0)
+    centers = (jnp.arange(n_rsu, dtype=jnp.float32) + 0.5) / n_rsu
+    return centers >= jnp.asarray(frac, jnp.float32)
+
+
 def n_rsu_of(cfg) -> int:
     """Static RSU count of a traffic config.
 
@@ -57,6 +94,10 @@ def rsu_geometry(pos: jax.Array, cfg: TrafficConfig):
     n_rsu = n_rsu_of(cfg)
     rsu_pos = jnp.arange(n_rsu) * cfg.rsu_spacing_m
     d_along = _ring_dist(pos[:, None], rsu_pos[None, :], cfg.ring_length_m)
+    # dark RSUs (rsu_outage scenarios) never win the attachment argmin:
+    # vehicles in an outage corridor attach to the nearest LIVE RSU, paying
+    # the longer haul and concentrating load on the survivors.
+    d_along = jnp.where(rsu_up_mask(cfg)[None, :], d_along, jnp.inf)
     rid = jnp.argmin(d_along, axis=1)
     d_min = jnp.take_along_axis(d_along, rid[:, None], axis=1)[:, 0]
     dist3d = jnp.sqrt(d_min**2 + 15.0**2 + 5.0**2)  # lateral offset + mast height

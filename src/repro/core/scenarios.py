@@ -2,17 +2,23 @@
 
 The paper's experiments fix one road topology; convincing strategy
 comparisons need many scenario repetitions (Chellapandi et al. 2023).  This
-module provides (a) a catalog of named ``TrafficConfig`` variants — ring,
-highway and urban-grid density settings of the same RSU count — and (b)
+module provides (a) a catalog of named ``TrafficConfig`` variants — steady
+densities (ring / highway / urban_grid), a time-varying density schedule
+(rush_hour) and masked infrastructure (rsu_outage) — and (b)
 ``ScenarioParams``, a pytree view of the scenario-varying fields so a whole
-(strategy x seed x scenario) grid runs as ONE vmapped program.
+(strategy x seed x scenario) grid runs as ONE vmapped (or mesh-sharded)
+program.
 
-Design rule: every field that determines an array *shape* or a loop *trip
-count* (vehicle count, RSU count, sub-step dt, prediction horizon) is static
-metadata and must agree across a stacked grid; everything else (geometry,
-kinematics, radio constants) is a traced leaf and may vary per scenario.
-All catalog entries therefore share ``n_rsu`` (ring length / RSU spacing)
-so density varies while the compiled program does not.
+Shape conventions (see docs/scenarios.md for the authoring guide):
+
+  * every field that determines an array *shape* or a loop *trip count*
+    (vehicle count, RSU count, sub-step dt, prediction horizon) is static
+    pytree metadata and must agree across a stacked grid;
+  * everything else (geometry, kinematics, radio constants, the rush-hour
+    schedule, the outage fraction) is a traced f32 leaf — scalar for one
+    scenario, ``(G,)`` with the grid axis LEADING under the batched engine;
+  * all catalog entries therefore share ``n_rsu`` (ring length / RSU
+    spacing) so density varies while the compiled program does not.
 """
 from __future__ import annotations
 
@@ -40,6 +46,9 @@ _TRACED_FIELDS = (
     "backhaul_s",
     "queue_s_per_vehicle",
     "overhead_bytes",
+    "rush_amp",
+    "rush_period_s",
+    "rsu_outage_frac",
 )
 _STATIC_FIELDS = (
     "num_vehicles",
@@ -73,6 +82,9 @@ class ScenarioParams:
     backhaul_s: jax.Array
     queue_s_per_vehicle: jax.Array
     overhead_bytes: jax.Array
+    rush_amp: jax.Array
+    rush_period_s: jax.Array
+    rsu_outage_frac: jax.Array
     num_vehicles: int
     num_lanes: int
     n_rsu: int
@@ -150,10 +162,45 @@ def urban_grid(num_vehicles: int = 100, **kw) -> TrafficConfig:
     )
 
 
+def rush_hour(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Commuter arterial with a time-varying density schedule: an 8 km loop
+    whose effective density swells to 3.5x at the wave peak
+    (``congestion_factor`` drags realized travel speed and multiplies RSU
+    contention), then relaxes to free flow each ``rush_period_s``."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=8_000.0,
+        rsu_spacing_m=800.0,
+        mean_speed_mps=10.0,
+        speed_std_mps=4.0,
+        accel_std=1.0,
+        queue_s_per_vehicle=0.012,
+        rush_amp=2.5,
+        rush_period_s=600.0,
+        **kw,
+    )
+
+
+def rsu_outage(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Infrastructure failure: a 12 km ring where a contiguous 40% of RSUs
+    are dark (``rsu_up_mask``); vehicles in the outage corridor attach to
+    distant live RSUs, concentrating load and latency on the survivors."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=12_000.0,
+        rsu_spacing_m=1_200.0,
+        mean_speed_mps=16.0,
+        rsu_outage_frac=0.4,
+        **kw,
+    )
+
+
 SCENARIOS: Dict[str, callable] = {
     "ring": ring,
     "highway": highway,
     "urban_grid": urban_grid,
+    "rush_hour": rush_hour,
+    "rsu_outage": rsu_outage,
 }
 
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import TrafficConfig
+from repro.core.rttg import congestion_factor
 from repro.utils import fold_in_str
 
 
@@ -64,7 +65,12 @@ def twin_step(state: TwinState, cfg, key: jax.Array, dt: float) -> TwinState:
         + cfg.accel_std * jnp.sqrt(jnp.asarray(dt)) * eps
     )
     speed = jnp.clip(state.speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
-    pos = jnp.mod(state.pos + speed * dt, cfg.ring_length_m)
+    # rush-hour congestion is a displacement drag: the OU speed is the
+    # free-flow intent, realized travel divides by the density factor (so
+    # the RTTG predictor overestimates motion at the peak — prediction
+    # error under congestion is part of the experiment, as in the paper)
+    v_eff = speed / congestion_factor(state.t, cfg)
+    pos = jnp.mod(state.pos + v_eff * dt, cfg.ring_length_m)
     return state._replace(t=state.t + dt, pos=pos, speed=speed, accel=accel)
 
 
@@ -99,7 +105,8 @@ def advance_twin(
             eps = jax.random.normal(jax.random.fold_in(key, i), (N,))
             accel = s.accel * decay + noise_std * eps
             speed = jnp.clip(s.speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
-            pos = jnp.mod(s.pos + speed * dt, cfg.ring_length_m)
+            v_eff = speed / congestion_factor(s.t, cfg)  # rush-hour drag
+            pos = jnp.mod(s.pos + v_eff * dt, cfg.ring_length_m)
             return s._replace(t=s.t + dt, pos=pos, speed=speed, accel=accel)
 
         return jax.lax.fori_loop(0, num_substeps, body, state)

@@ -1,6 +1,11 @@
 """Federated-learning runtime: partitioning, clients, server, round core,
 the batched experiment engine, and the legacy per-round simulation API."""
-from repro.fl.partition import partition_clients, make_test_set
+from repro.fl.partition import (
+    client_images,
+    make_test_set,
+    partition_clients,
+    partition_labels,
+)
 from repro.fl.client import make_local_trainer
 from repro.fl.server import fedavg_aggregate
 from repro.fl.rounds import (
@@ -10,6 +15,8 @@ from repro.fl.rounds import (
     RoundState,
     STRATEGY_ORDER,
     init_experiment,
+    init_state,
+    make_round_data,
     make_round_step,
     make_warmup,
     metrics_to_records,
@@ -19,6 +26,8 @@ from repro.fl.simulation import FLSimulation, time_to_accuracy
 
 __all__ = [
     "partition_clients",
+    "partition_labels",
+    "client_images",
     "make_test_set",
     "make_local_trainer",
     "fedavg_aggregate",
@@ -28,6 +37,8 @@ __all__ = [
     "RoundState",
     "STRATEGY_ORDER",
     "init_experiment",
+    "init_state",
+    "make_round_data",
     "make_round_step",
     "make_warmup",
     "metrics_to_records",

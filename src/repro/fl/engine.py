@@ -7,15 +7,38 @@ round.  This engine runs a whole grid as a single XLA program:
     rounds (zero per-round host syncs; eval is a strided ``lax.cond``);
   * the grid axis is a ``vmap`` over (RoundState, RoundData, ScenarioParams,
     strategy index), so strategies, seeds and scenarios batch together;
+  * given a device ``mesh``, the grid axis is SHARDED over it with
+    ``shard_map`` (resolved through the ``"grid"`` rule in
+    ``sharding.rules.TRAIN_RULES``, rows padded to the shard count and
+    sliced back) — states, scenarios and the scan compute split across
+    devices, so multi-device hosts and pods sweep hundreds of scenarios;
+    falls back to the plain vmapped program whenever the mesh has a
+    single device.  RoundData rows REPLICATE per device (each device
+    materializes every unique (strategy, seed) row — scenario-heavy grids
+    shard perfectly, seed-heavy grids are still bounded by the unique-pair
+    data footprint per device);
+  * client shards are partitioned ON DEVICE inside the compiled program
+    (``partition_on_device=True``, the default): the host stacks only
+    per-experiment PRNG keys + (C,) region ids and ``rounds.make_round_data``
+    materializes the (C, n, H, W, ch) shards per unique (strategy, seed)
+    under jit, so grid size is bounded by device memory, not host RAM;
   * per-round test evaluation is hoisted to every ``eval_every`` rounds
     (the final round always evaluates).
+
+Shape conventions: the grid axis G is the LEADING dim of every stacked
+leaf (states, scenario params, strategy indices, metrics); ``RoundData``
+rows are deduplicated to one per unique (strategy, seed) and gathered
+per lane by ``data_idx``.  Selection inside the round core is mask-based
+and fixed-size; updates travel in the flat (K, P) layout (see
+``repro.fl.rounds``).
 
 Usage:
 
     eng = ExperimentEngine(model_cfg, fl_cfg, "mnist",
-                           strategies=("contextual", "gossip"))
+                           strategies=("contextual", "gossip"),
+                           mesh=make_grid_mesh())  # omit mesh on one device
     result = eng.run_grid(strategies=("contextual", "gossip"),
-                          seeds=(0, 1), scenarios=("ring", "highway"),
+                          seeds=(0, 1), scenarios=("ring", "rush_hour"),
                           rounds=40, eval_every=5)
     result.records(strategy="contextual", seed=0, scenario="ring")
 
@@ -31,20 +54,25 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
 from repro.core.scenarios import scenario_config, scenario_params, stack_scenarios
 from repro.fl.rounds import (
+    RoundData,
     RoundMetrics,
     RoundRecord,
     cohort_size_for,
     flat_spec_of,
-    init_experiment,
+    init_state,
+    make_round_data,
     make_round_step,
     make_warmup,
     metrics_to_records,
 )
 from repro.models import build_model
+from repro.sharding import SHARD_MAP_NO_CHECK, TRAIN_RULES, resolve_pspec, shard_map
 from repro.utils import tree_bytes
 
 ScenarioLike = Union[str, TrafficConfig]
@@ -71,14 +99,19 @@ class GridResult:
         return metrics_to_records(one)
 
     def final_accuracy(self) -> Dict[Tuple[str, int, str], float]:
-        import numpy as np
-
         acc = np.asarray(self.metrics.test_acc)
         return {run: float(acc[g, -1]) for g, run in enumerate(self.runs)}
 
 
 class ExperimentEngine:
-    """Compiles one program per (rounds, grid-shape) and reuses it."""
+    """Compiles one program per (rounds, grid-shape) and reuses it.
+
+    ``mesh``: optional ``jax.sharding.Mesh``; when its axes named by the
+    ``"grid"`` sharding rule span > 1 device, ``run_grid`` shards the grid
+    axis over them (``launch.mesh.make_grid_mesh()`` builds the all-device
+    1-D mesh).  ``partition_on_device``: build client shards inside the
+    compiled program (default) instead of stacking host copies.
+    """
 
     def __init__(
         self,
@@ -87,6 +120,8 @@ class ExperimentEngine:
         dataset: str,
         strategies: Sequence[str] = ("contextual",),
         num_clients: Optional[int] = None,
+        mesh=None,
+        partition_on_device: bool = True,
     ):
         if num_clients is not None:
             fl_cfg = dataclasses.replace(fl_cfg, num_clients=num_clients)
@@ -95,8 +130,11 @@ class ExperimentEngine:
         self.strategies = tuple(strategies)
         self.api = build_model(model_cfg)
         self.cohort_size = cohort_size_for(fl_cfg, self.strategies)
+        self.mesh = mesh
+        self.partition_on_device = partition_on_device
         self._round_step = None
         self._grid_fn = jax.jit(self._grid, static_argnames=("warm",))
+        self._sharded_fn = None  # built lazily once the padded spec is known
 
     # -- lazy build: model bytes / flat spec need a concrete param tree ----
     def _ensure_step(self, params):
@@ -116,17 +154,66 @@ class ExperimentEngine:
         return scenario_config(scenario, num_vehicles=self.fl.num_clients)
 
     def init_run(self, strategy: str, seed: int, scenario: ScenarioLike):
-        """Host-side build of one grid row: (state, data, scn, strategy_idx)."""
+        """Host-side build of one grid row: (state, data, scn, strategy_idx).
+
+        ``data`` is a full ``RoundData`` on the host path, or the tiny
+        (key, regions) seed the compiled program expands on device.
+        """
         tc = self._traffic_of(scenario)
-        state, data = init_experiment(
+        state, regions = init_state(
             self.api, self.fl, tc, self.dataset, strategy, jax.random.key(seed)
         )
         self._ensure_step(state.params)
+        if self.partition_on_device:
+            data = (state.key, regions)
+        else:
+            data = make_round_data(state.key, self.dataset, self.fl, regions)
         # local index into this engine's strategy tuple (the switch carries
         # only those branches), not the global STRATEGY_ORDER
         return state, data, scenario_params(tc), self.strategies.index(strategy)
 
+    # -- grid-axis sharding ------------------------------------------------
+    def grid_shards(self) -> int:
+        """How many ways the mesh's grid-rule axes split the grid dim."""
+        if self.mesh is None:
+            return 1
+        sizes = dict(self.mesh.shape)
+        n = 1
+        for a in TRAIN_RULES.get("grid") or ():
+            n *= sizes.get(a, 1)
+        return n
+
+    def _build_sharded(self, row: PartitionSpec):
+        """One shard_map program: each device runs the vmapped scan on its
+        slice of grid rows; RoundData seeds/rows and eval flags replicate."""
+        rep = PartitionSpec()
+
+        def fn(states, datas, scns, strat_idx, data_idx, flags):
+            def local(states, datas, scns, strat_idx, data_idx, flags):
+                return self._grid(states, datas, scns, strat_idx, data_idx, flags)
+
+            return shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(row, rep, row, row, row, rep),
+                out_specs=(row, row),
+                **SHARD_MAP_NO_CHECK,
+            )(states, datas, scns, strat_idx, data_idx, flags)
+
+        return jax.jit(fn)
+
     # -- the single compiled program --------------------------------------
+    def _materialize(self, datas) -> RoundData:
+        """Expand on-device data seeds into stacked RoundData rows (no-op on
+        the host path).  Runs inside jit: one traced partition per unique
+        (strategy, seed) — never a host-materialized copy."""
+        if isinstance(datas, RoundData):
+            return datas
+        keys, regions = datas
+        return jax.vmap(
+            lambda k, r: make_round_data(k, self.dataset, self.fl, r)
+        )(keys, regions)
+
     def _grid(self, states, datas, scns, strat_idx, data_idx, flags,
               warm: bool = True):
         # ``datas`` is unbatched (in_axes=None): rows differing only by
@@ -134,6 +221,7 @@ class ExperimentEngine:
         # experiment key folds strategy/seed/dataset, never the scenario),
         # so it holds one row per unique (strategy, seed) and each lane
         # gathers its row by ``data_idx`` — not one copy per grid cell.
+        datas = self._materialize(datas)
         step = self._round_step
 
         def one(state, scn, si, di):
@@ -187,7 +275,34 @@ class ExperimentEngine:
         strat_idx = jnp.asarray(sidx, jnp.int32)
         data_idx = jnp.asarray(didx, jnp.int32)
         flags = _eval_flags(rounds, eval_every)
-        _, metrics = self._grid_fn(states, datas, scns, strat_idx, data_idx, flags)
+
+        G = len(runs)
+        nsh = self.grid_shards()
+        if nsh > 1:
+            # pad grid rows to the shard count (repeating the last row),
+            # shard the leading axis, slice the metrics back afterwards
+            pad = (-G) % nsh
+            if pad:
+                pad_idx = np.concatenate([np.arange(G), np.full(pad, G - 1)])
+                take = lambda x: x[pad_idx]
+                states = jax.tree_util.tree_map(take, states)
+                scns = jax.tree_util.tree_map(take, scns)
+                strat_idx, data_idx = strat_idx[pad_idx], data_idx[pad_idx]
+            spec = resolve_pspec(("grid",), (G + pad,), self.mesh, TRAIN_RULES)
+            if len(spec) and spec[0] is not None:
+                if self._sharded_fn is None:
+                    self._sharded_fn = self._build_sharded(PartitionSpec(spec[0]))
+                _, metrics = self._sharded_fn(
+                    states, datas, scns, strat_idx, data_idx, flags
+                )
+                metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
+            else:  # divisibility fallback (should not happen after padding)
+                _, metrics = self._grid_fn(
+                    states, datas, scns, strat_idx, data_idx, flags
+                )
+                metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
+        else:
+            _, metrics = self._grid_fn(states, datas, scns, strat_idx, data_idx, flags)
         scenarios = list(scenarios)
 
         def _label(sc):

@@ -1,11 +1,28 @@
-"""Non-iid data partitioning across CAV clients.
+"""Non-iid data partitioning across CAV clients — traceable end to end.
 
 Default paper setting: each client owns ``classes_per_client`` of the 10
 classes (§IV footnote 2: 2 of 10); Fig. 4 sweeps this "class ratio" from
-1 class (extreme non-iid) to 10 (iid).  A Dirichlet(alpha) mode is included
-for completeness.  Class prototypes are shared across clients (same dataset
-key) while sample noise is per-client, so clients with the same classes have
+1 class (extreme non-iid) to 10 (iid).  A Dirichlet(alpha) mode
+(``FLConfig.dirichlet_alpha > 0``) draws per-client class proportions
+instead.  Class prototypes are shared across clients (same dataset key)
+while sample noise is per-client, so clients with the same classes have
 genuinely similar distributions — the property stage-3 clustering exploits.
+
+Shape conventions:
+
+  * ``partition_labels``  -> (C, n) int32 — the *index map*: which shared
+    prototype each of client c's n samples points at;
+  * ``client_images``     -> (C, n, H, W, ch) — materialization of that map
+    (``protos[labels] + noise``), pure jnp so it runs eagerly on the host
+    OR traced inside a jitted program;
+  * ``partition_clients`` -> both, the legacy one-call API.
+
+Every function here is a pure function of (key, static config, traced
+``regions``), which is what lets the batched engine build client shards
+ON DEVICE inside its compiled grid program (``repro.fl.rounds
+.make_round_data``) instead of host-materializing one (C, n, H, W, ch)
+copy per (strategy, seed) — grids then scale past host RAM: the host only
+ever stacks per-experiment PRNG keys and (C,) region ids.
 """
 from __future__ import annotations
 
@@ -39,15 +56,17 @@ def geographic_class_sets(regions: jax.Array, num_classes: int, k: int) -> jax.A
     return jnp.mod(r + jnp.arange(k)[None, :], num_classes)
 
 
-def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
-    """Returns (images (C,n,H,W,ch), labels (C,n)) for all C clients.
+def partition_labels(key, dataset: str, cfg: FLConfig, regions=None) -> jax.Array:
+    """(C, n) int32 per-client sample labels — the traced shard index map.
 
-    ``regions``: optional (C,) road-region ids enabling geographic non-iid.
+    Dirichlet mode (``cfg.dirichlet_alpha > 0``) draws per-client class
+    proportions; otherwise each client owns ``classes_per_client`` classes
+    (geographic when ``regions`` is given, uniform-random otherwise).
+    Pure jnp: jit/vmap-safe given static ``dataset``/``cfg``.
     """
     spec = dataset_spec(dataset)
     C, n = cfg.num_clients, cfg.samples_per_client
     kd = fold_in_str(key, f"data/{dataset}")
-    protos = class_prototypes(kd, spec)  # shared across clients
 
     if cfg.dirichlet_alpha > 0:
         ka = fold_in_str(kd, "dirichlet")
@@ -66,13 +85,34 @@ def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
         kl = jax.random.split(fold_in_str(kd, "labels"), C)
         pick = jax.vmap(lambda kk: jax.random.randint(kk, (n,), 0, k))(kl)
         labels = jnp.take_along_axis(own, pick, axis=1)  # (C, n)
+    return labels
 
+
+def client_images(key, dataset: str, labels: jax.Array) -> jax.Array:
+    """Materialize (C, n, H, W, ch) images from a (C, n) label index map.
+
+    ``protos[labels] + noise`` with prototypes shared across clients and
+    noise per-client; deterministic in (key, labels), so the host path and
+    the on-device path produce identical arrays.
+    """
+    spec = dataset_spec(dataset)
+    C, n = labels.shape
+    kd = fold_in_str(key, f"data/{dataset}")
+    protos = class_prototypes(kd, spec)  # shared across clients
     kn = jax.random.split(fold_in_str(kd, "noise"), C)
     noise = jax.vmap(
         lambda kk: spec.noise * jax.random.normal(kk, (n, *spec.shape))
     )(kn)
-    images = protos[labels] + noise
-    return images, labels
+    return protos[labels] + noise
+
+
+def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
+    """Returns (images (C,n,H,W,ch), labels (C,n)) for all C clients.
+
+    ``regions``: optional (C,) road-region ids enabling geographic non-iid.
+    """
+    labels = partition_labels(key, dataset, cfg, regions)
+    return client_images(key, dataset, labels), labels
 
 
 def make_test_set(key, dataset: str, n_test: int = 2_000):

@@ -19,6 +19,16 @@ with *fixed-size, mask-based* selection (no data-dependent shapes) and
 Aggregation runs on the *flat* update layout through the Pallas
 ``fedavg_reduce`` kernel (one HBM sweep of the (K, P) update matrix),
 rather than K pytree AXPYs.
+
+Shape conventions (docs/architecture.md has the full walkthrough):
+
+  * N = num_clients, K = cohort_size (static; selection is a length-N
+    bool MASK compacted into K slots, never a data-dependent gather);
+  * client updates travel as the FLAT (K, P) layout (``flat_spec_of``
+    round-trips the pytree) until the single FedAvg reduction;
+  * every ``RoundState``/``RoundData``/``RoundMetrics`` leaf gains a
+    LEADING grid axis (G, ...) under the batched engine — per-experiment
+    code never indexes it, ``vmap``/``shard_map`` insert it.
 """
 from __future__ import annotations
 
@@ -120,15 +130,20 @@ def flat_spec_of(params) -> Any:
     return (treedef, [x.shape for x in leaves], [x.dtype for x in leaves])
 
 
-def init_experiment(
+def init_state(
     api,
     fl: FLConfig,
     traffic_cfg: TrafficConfig,
     dataset: str,
     strategy: str,
     key: jax.Array,
-) -> Tuple[RoundState, RoundData]:
-    """Build the initial state + data shard for one experiment (host-side)."""
+) -> Tuple[RoundState, jax.Array]:
+    """Build one experiment's initial ``RoundState`` plus its (C,) regions.
+
+    Cheap (model params + twin kinematics only); the heavy client shards
+    are a separate step (``make_round_data``) so the batched engine can
+    defer them to the device inside its compiled grid program.
+    """
     assert fl.num_clients == traffic_cfg.num_vehicles, (
         "every FL client is a CAV: num_clients must equal num_vehicles"
     )
@@ -141,8 +156,6 @@ def init_experiment(
     regions = jnp.floor(
         twin_state.pos / traffic_cfg.ring_length_m * n_regions
     ).astype(jnp.int32) % n_regions
-    images, labels = partition_clients(key, dataset, fl, regions)
-    test_x, test_y = make_test_set(key, dataset)
     N = fl.num_clients
     state = RoundState(
         params=params,
@@ -154,7 +167,34 @@ def init_experiment(
         sim_time=jnp.zeros((), jnp.float32),
         key=key,
     )
-    return state, RoundData(images, labels, test_x, test_y)
+    return state, regions
+
+
+def make_round_data(
+    key: jax.Array, dataset: str, fl: FLConfig, regions: jax.Array
+) -> RoundData:
+    """Client shards + test set from (key, regions) — pure jnp.
+
+    ``key`` is the experiment key (``RoundState.key``).  Runs eagerly on
+    the host (legacy loop) or traced inside the engine's grid program
+    (device-side partitioning): both paths produce identical arrays.
+    """
+    images, labels = partition_clients(key, dataset, fl, regions)
+    test_x, test_y = make_test_set(key, dataset)
+    return RoundData(images, labels, test_x, test_y)
+
+
+def init_experiment(
+    api,
+    fl: FLConfig,
+    traffic_cfg: TrafficConfig,
+    dataset: str,
+    strategy: str,
+    key: jax.Array,
+) -> Tuple[RoundState, RoundData]:
+    """Build the initial state + data shard for one experiment (host-side)."""
+    state, regions = init_state(api, fl, traffic_cfg, dataset, strategy, key)
+    return state, make_round_data(state.key, dataset, fl, regions)
 
 
 def make_warmup(loss_fn, fl: FLConfig):

@@ -3,6 +3,13 @@
   PYTHONPATH=src python -m repro.launch.fl_sim --dataset mnist \
       --strategy contextual --rounds 60 --connection-rate 1.0 \
       --classes-per-client 2 --out artifacts/fl/mnist_contextual.json
+
+``--scenario`` selects any entry of the ``repro.core.scenarios`` catalog —
+steady densities (ring / highway / urban_grid) plus the time-varying
+``rush_hour`` and infrastructure-failure ``rsu_outage`` families (see
+docs/scenarios.md).  Whole (strategy x seed x scenario) sweeps should use
+``repro.fl.engine.ExperimentEngine`` directly: it batches the grid into
+one device-resident program and shards it over a mesh when given one.
 """
 from __future__ import annotations
 

@@ -19,3 +19,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke runs (same axis names as single pod)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_grid_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the visible devices for grid-sharded
+    FL experiment sweeps (``ExperimentEngine(mesh=...)``).
+
+    The engine's grid axis resolves through the ``"grid"`` rule in
+    ``sharding.rules.TRAIN_RULES`` — ``("pod", "data")`` — so this mesh
+    shards a (strategy x seed x scenario) grid over every device; on a
+    1-device host the engine falls back to the plain vmapped program.
+    """
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -31,22 +31,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import dense_init
-from repro.sharding import act_shard
+from repro.sharding import SHARD_MAP_NO_CHECK as _SHARD_MAP_NO_CHECK
+from repro.sharding import act_shard, shard_map
 from repro.sharding.context import _STATE as _SHARD_STATE
-
-try:  # jax >= 0.6 exposes shard_map at the top level
-    from jax import shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
-import inspect as _inspect
-
-# the replication-check kwarg was renamed check_rep -> check_vma in jax 0.6
-_SHARD_MAP_NO_CHECK = (
-    {"check_vma": False}
-    if "check_vma" in _inspect.signature(shard_map).parameters
-    else {"check_rep": False}
-)
 
 
 def _round_up(x: int, m: int) -> int:

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
     "batch": ("pod", "data"),
     "client": ("pod", "data"),  # FL cohort axis
+    "grid": ("pod", "data"),  # FL experiment-grid axis (engine shard_map)
     "seq": None,
     "embed": ("data",),  # ZeRO-3/FSDP shard of params over the data axis
     "embed_act": None,  # activations keep embed replicated (TP gathers)

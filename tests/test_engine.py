@@ -6,7 +6,16 @@ The engine runs a whole experiment as one ``lax.scan`` of the pure
 parity test therefore checks the scan/host-loop equivalence of the entire
 pipeline (fusion -> prediction -> clustering -> election -> cohort training
 -> Pallas FedAvg -> round economics) end to end.
+
+Also covered here: on-device vs host client partitioning equivalence,
+mesh-sharded vs vmapped grid parity (subprocess, fake multi-device), and
+the rush_hour / rsu_outage scenario families.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -112,6 +121,146 @@ def test_scenario_mismatched_statics_rejected():
     b = scenario_params(scenario_config("ring", num_vehicles=16))
     with pytest.raises(ValueError):
         stack_scenarios([a, b])
+
+
+def test_jitted_partition_equals_host():
+    """Device-side partitioning is the SAME pure function the host ran:
+    jitting it (as the engine's grid program does) changes nothing."""
+    from repro.fl.partition import make_test_set, partition_clients
+
+    regions = jnp.arange(FL.num_clients) % 10
+    key = jax.random.key(7)
+    xi, yi = partition_clients(key, "mnist", FL, regions)
+    xj, yj = jax.jit(
+        lambda k, r: partition_clients(k, "mnist", FL, r)
+    )(key, regions)
+    np.testing.assert_array_equal(np.asarray(yi), np.asarray(yj))
+    # jit may fuse the proto+noise adds differently from eager: allow ulp-
+    # level drift, nothing more
+    np.testing.assert_allclose(np.asarray(xi), np.asarray(xj),
+                               rtol=1e-5, atol=1e-5)
+    # dirichlet mode is traceable too
+    fld = FLConfig(num_clients=12, samples_per_client=64, batch_size=32,
+                   num_clusters=4, dirichlet_alpha=0.5)
+    yd = jax.jit(lambda k: partition_clients(k, "mnist", fld)[1])(key)
+    assert yd.shape == (12, 64)
+    tx, ty = jax.jit(lambda k: make_test_set(k, "mnist"))(key)
+    tx2, ty2 = make_test_set(key, "mnist")
+    np.testing.assert_array_equal(np.asarray(ty), np.asarray(ty2))
+
+
+def test_partition_on_device_matches_host():
+    """Engine grids agree whether client shards are host-stacked or built
+    inside the compiled program from (key, regions) seeds."""
+    kw = dict(seeds=(0, 1), scenarios=("ring", "rsu_outage"), rounds=2,
+              eval_every=2)
+    r_dev = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                             partition_on_device=True).run_grid(**kw)
+    r_host = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                              partition_on_device=False).run_grid(**kw)
+    assert r_dev.runs == r_host.runs
+    for f in r_dev.metrics._fields:
+        a = np.asarray(getattr(r_dev.metrics, f))
+        b = np.asarray(getattr(r_host.metrics, f))
+        m = np.isfinite(b)
+        np.testing.assert_array_equal(np.isfinite(a), m, err_msg=f)
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-5, atol=1e-6, err_msg=f)
+
+
+def test_single_device_mesh_falls_back_to_vmap():
+    """A 1-device grid mesh must not change results (or the program)."""
+    from repro.launch.mesh import make_grid_mesh
+
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                           mesh=make_grid_mesh())
+    assert eng.grid_shards() == len(jax.devices())
+    res = eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=2, eval_every=1)
+    base = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+    ref = base.run_grid(seeds=(0,), scenarios=("ring",), rounds=2, eval_every=1)
+    for a, b in zip(res.records("contextual", 0, "ring"),
+                    ref.records("contextual", 0, "ring")):
+        _records_close(a, b)
+
+
+def test_rush_hour_and_outage_semantics():
+    """The new scenario families change the physics the right way."""
+    from repro.core.network import latency_model
+    from repro.core.rttg import build_rttg, congestion_factor, rsu_up_mask
+
+    rush = scenario_params(scenario_config("rush_hour", num_vehicles=12))
+    ring = scenario_params(scenario_config("ring", num_vehicles=12))
+    # schedule: free flow at period boundaries, peak congestion mid-period
+    assert float(congestion_factor(0.0, rush)) == pytest.approx(1.0)
+    peak = float(congestion_factor(0.5 * float(rush.rush_period_s), rush))
+    assert peak == pytest.approx(1.0 + float(rush.rush_amp))
+    assert float(congestion_factor(123.4, ring)) == 1.0
+
+    out = scenario_params(scenario_config("rsu_outage", num_vehicles=12))
+    up = np.asarray(rsu_up_mask(out))
+    assert up.shape == (out.n_rsu,) and 0 < up.sum() < out.n_rsu
+    assert np.all(rsu_up_mask(ring))
+    # vehicles never attach to a dark RSU, and the longer haul + load
+    # concentration raises latency vs the fully-lit ring
+    pos = jnp.linspace(0.0, 12_000.0, 12, endpoint=False)
+    zeros = jnp.zeros_like(pos)
+    rt_out = build_rttg(0.0, pos, zeros + 14.0, zeros, zeros, out)
+    assert bool(jnp.all(rsu_up_mask(out)[rt_out.rsu_id]))
+    import dataclasses
+
+    lit = scenario_params(dataclasses.replace(
+        scenario_config("rsu_outage", num_vehicles=12), rsu_outage_frac=0.0
+    ))
+    rt_lit = build_rttg(0.0, pos, zeros + 14.0, zeros, zeros, lit)
+    mb = 1e5
+    assert float(jnp.mean(latency_model(rt_out, mb, out))) > float(
+        jnp.mean(latency_model(rt_lit, mb, lit))
+    )
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from repro.config import FLConfig, ModelConfig
+    from repro.fl.engine import ExperimentEngine
+    from repro.launch.mesh import make_grid_mesh
+
+    MLP = ModelConfig(name="mlp", family="mlp", num_layers=0, d_model=0,
+                      num_heads=0, num_kv_heads=0, d_ff=48, vocab_size=0,
+                      image_shape=(28, 28, 1), num_classes=10, channels=())
+    FL = FLConfig(num_clients=12, samples_per_client=64, local_epochs=1,
+                  num_clusters=4, batch_size=32, recluster_every=2)
+    # G=6 rows on 4 shards: exercises the pad-to-shard-count + slice-back path
+    kw = dict(seeds=(0, 1, 2), scenarios=("ring", "rush_hour"), rounds=3,
+              eval_every=3)
+    base = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+    rb = base.run_grid(**kw)
+    sh = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                          mesh=make_grid_mesh())
+    assert sh.grid_shards() == 4, sh.grid_shards()
+    rs = sh.run_grid(**kw)
+    assert rs.runs == rb.runs
+    for f in rb.metrics._fields:
+        a, b = np.asarray(getattr(rs.metrics, f)), np.asarray(getattr(rb.metrics, f))
+        m = np.isfinite(b)
+        assert np.isfinite(a).sum() == m.sum(), f
+        np.testing.assert_allclose(a[m], b[m], rtol=2e-4, atol=1e-5, err_msg=f)
+    print("SHARDED_GRID_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_grid_matches_vmapped_on_4_devices():
+    """shard_map grid == vmapped grid, row for row (subprocess: the fake
+    device count must be set before jax initializes)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=560,
+    )
+    assert "SHARDED_GRID_OK" in out.stdout, out.stderr[-2000:]
 
 
 def test_timeout_configurable():
