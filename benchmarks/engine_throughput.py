@@ -8,9 +8,13 @@ sharding that program's grid axis over a device mesh (``mesh=``) matches
 the vmapped baseline on one device (it falls back to the identical program)
 and scales it on multi-device hosts (each device sweeps its slice of rows).
 
-The grid spans the full scenario catalog — steady densities plus the
-``rush_hour`` and ``rsu_outage`` families — exercising the traced schedule /
-outage leaves under both executions.
+The grid spans the full scenario catalog — steady densities, the
+``rush_hour`` / ``day_cycle`` schedules, ``rsu_outage``, convoy-coupled
+``platoon`` and the ``hetero_fleet`` compute mixture — exercising every
+traced scenario leaf under both executions.  ``--smoke`` (also
+``main(smoke_mode=True)``) runs a 1-round tiny grid down the same path;
+tier-1 wires it in so throughput-path regressions fail fast instead of
+only surfacing in manual bench runs.
 
 Each path runs the grid TWICE: the cold sweep pays compilation, the steady
 sweep is the amortized regime a real campaign (fig3 + table1 + fig4 share
@@ -21,6 +25,7 @@ removes.  The headline speedup is the steady sweep's.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -29,7 +34,10 @@ from benchmarks.common import cached
 
 STRATEGIES = ("contextual", "gossip")
 SEEDS = (0, 1)
-SCENARIOS = ("ring", "highway", "urban_grid", "rush_hour", "rsu_outage")
+SCENARIOS = (
+    "ring", "highway", "urban_grid", "rush_hour", "rsu_outage",
+    "platoon", "hetero_fleet", "day_cycle",
+)
 ROUNDS = 5
 EVAL_EVERY = 5
 
@@ -134,7 +142,42 @@ def _run(num_clients=20, samples=64):
     }
 
 
-def main(num_clients=20, samples=64):
+def smoke(num_clients=8, samples=32):
+    """1-round, tiny-grid sweep down the ENTIRE engine throughput path.
+
+    No timing claims — this exists so tier-1 catches regressions on the
+    path the real bench (and every campaign) exercises: device-resident
+    init + on-device partitioning + the vmapped scan over a mixed grid
+    spanning the full scenario catalog.  Uncached (it is the regression
+    probe, stale results would defeat it), small enough for the test
+    suite (tests/test_benchmarks.py wires it in).
+    """
+    from repro.config import FLConfig
+    from repro.configs import get_config
+    from repro.fl.engine import ExperimentEngine
+
+    model = get_config("fl-mnist-mlp")
+    fl = FLConfig(num_clients=num_clients, samples_per_client=samples,
+                  batch_size=16, num_clusters=4, local_epochs=1)
+    eng = ExperimentEngine(model, fl, "mnist", strategies=("contextual",))
+    t0 = time.perf_counter()
+    res = eng.run_grid(seeds=(0,), scenarios=SCENARIOS, rounds=1, eval_every=1)
+    jax.block_until_ready(res.metrics)
+    dt = time.perf_counter() - t0
+    n = len(res.runs)
+    r = {"grid": n, "rounds_per_experiment": 1, "total_rounds": n,
+         "smoke_s": dt, "final_acc": res.final_accuracy()}
+    print(f"engine-smoke,grid={n}x1r,scenarios={len(SCENARIOS)},"
+          f"elapsed={dt:.1f}s")
+    return r
+
+
+def main(num_clients=None, samples=None, smoke_mode=False):
+    # per-mode defaults: the probe stays tiny, the timed bench keeps its
+    # historical grid; explicit sizes pass through to either mode
+    if smoke_mode:
+        return smoke(num_clients=num_clients or 8, samples=samples or 32)
+    num_clients, samples = num_clients or 20, samples or 64
     ndev = len(jax.devices())
     r = cached(f"engine_throughput_c{num_clients}_s{samples}_d{ndev}",
                lambda: _run(num_clients, samples))
@@ -150,4 +193,8 @@ def main(num_clients=20, samples=64):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1 round, tiny grid, full catalog — the tier-1 probe")
+    args = ap.parse_args()
+    main(smoke_mode=args.smoke)

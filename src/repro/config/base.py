@@ -252,6 +252,25 @@ class TrafficConfig:
     rush_amp: float = 0.0  # peak congestion amplitude (0 = steady density)
     rush_period_s: float = 900.0  # commuter-wave period for rush_hour
     rsu_outage_frac: float = 0.0  # fraction of RSUs dark (masked attachment)
+    # platoon family: convoys share OU noise + spawn position/speed.
+    # ``platoon_size`` is STATIC (it fixes the convoy index map); the
+    # coupling gain is traced, 0 = fully independent vehicles.
+    platoon_size: int = 4
+    platoon_coupling: float = 0.0  # in [0, 1]: shared fraction of OU noise
+    platoon_gap_m: float = 25.0  # inter-vehicle spawn gap inside a convoy
+    # hetero_fleet family: per-client compute_factor mixture (sedan tier is
+    # the remainder at 1x; fracs 0 = the single-lognormal legacy fleet)
+    compute_lognorm_std: float = 0.35  # within-tier lognormal jitter
+    fleet_truck_frac: float = 0.0  # fraction of trucks (slower compute)
+    fleet_bus_frac: float = 0.0  # fraction of buses (slowest compute)
+    fleet_truck_factor: float = 1.0  # truck compute-time multiplier
+    fleet_bus_factor: float = 1.0  # bus compute-time multiplier
+    # day_cycle family: a Fourier-style envelope modulating rush_amp —
+    # congestion = 1 + rush_amp * sin^2(pi t / rush_period_s) * envelope(t),
+    # envelope = 1 + day_amp * (sin^2(pi t/T) + day_harmonic2 sin^2(2 pi t/T))
+    day_amp: float = 0.0  # 0 = no day envelope (waves keep constant peak)
+    day_period_s: float = 7_200.0  # one compressed "day"
+    day_harmonic2: float = 0.0  # weight of the 2nd harmonic (two peaks/day)
 
 
 @dataclass(frozen=True)

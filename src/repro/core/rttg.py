@@ -34,24 +34,43 @@ def _ring_dist(a, b, length):
     return jnp.minimum(d, length - d)
 
 
+def day_envelope(t, cfg) -> jax.Array:
+    """Fourier-style daily modulation of the rush-wave amplitude (>= 1).
+
+    ``1 + day_amp * (sin^2(pi t / T) + day_harmonic2 * sin^2(2 pi t / T))``
+    with ``T = day_period_s``: the fundamental peaks once per day, the
+    second harmonic adds the morning/evening double hump.  Exactly 1.0 when
+    ``day_amp == 0`` (every non-day_cycle scenario), so composing it under
+    ``congestion_factor`` is bit-identical to the single-wave model there.
+    """
+    amp = getattr(cfg, "day_amp", 0.0)
+    period = getattr(cfg, "day_period_s", 7_200.0)
+    h2 = getattr(cfg, "day_harmonic2", 0.0)
+    x = jnp.pi * jnp.asarray(t, jnp.float32) / jnp.maximum(period, 1e-3)
+    s1, s2 = jnp.sin(x), jnp.sin(2.0 * x)
+    return 1.0 + amp * (s1 * s1 + h2 * s2 * s2)
+
+
 def congestion_factor(t, cfg) -> jax.Array:
-    """Time-varying density multiplier >= 1 (the rush_hour family).
+    """Time-varying density multiplier >= 1 (rush_hour / day_cycle families).
 
     A commuter wave: ``1 + rush_amp * sin^2(pi t / rush_period_s)`` peaks
-    mid-period and returns to free flow at the period boundaries.  With
+    mid-period and returns to free flow at the period boundaries; the
+    ``day_cycle`` family multiplies the wave amplitude by ``day_envelope``
+    so successive waves swell and relax through a compressed day.  With
     ``rush_amp == 0`` (every steady-density scenario) the factor is exactly
     1.0, so steady scenarios are bit-identical to the pre-schedule model.
     ``cfg`` may be a concrete ``TrafficConfig`` or a traced
     ``ScenarioParams``; both carry the schedule fields as (possibly traced)
-    leaves, which is what lets one compiled grid program sweep rush-hour
-    and steady scenarios side by side.
+    leaves, which is what lets one compiled grid program sweep rush-hour,
+    day-cycle and steady scenarios side by side.
     """
     amp = getattr(cfg, "rush_amp", 0.0)
     period = getattr(cfg, "rush_period_s", 900.0)
     phase = jnp.sin(
         jnp.pi * jnp.asarray(t, jnp.float32) / jnp.maximum(period, 1e-3)
     )
-    return 1.0 + amp * phase * phase
+    return 1.0 + amp * phase * phase * day_envelope(t, cfg)
 
 
 def rsu_up_mask(cfg) -> jax.Array:

@@ -3,20 +3,23 @@
 The paper's experiments fix one road topology; convincing strategy
 comparisons need many scenario repetitions (Chellapandi et al. 2023).  This
 module provides (a) a catalog of named ``TrafficConfig`` variants — steady
-densities (ring / highway / urban_grid), a time-varying density schedule
-(rush_hour) and masked infrastructure (rsu_outage) — and (b)
-``ScenarioParams``, a pytree view of the scenario-varying fields so a whole
-(strategy x seed x scenario) grid runs as ONE vmapped (or mesh-sharded)
-program.
+densities (ring / highway / urban_grid), time-varying density schedules
+(rush_hour, and day_cycle's composed Fourier envelope of rush waves),
+masked infrastructure (rsu_outage), correlated convoy kinematics (platoon)
+and compute-tier mixtures (hetero_fleet) — and (b) ``ScenarioParams``, a
+pytree view of the scenario-varying fields so a whole (strategy x seed x
+scenario) grid runs as ONE vmapped (or mesh-sharded) program.
 
 Shape conventions (see docs/scenarios.md for the authoring guide):
 
   * every field that determines an array *shape* or a loop *trip count*
-    (vehicle count, RSU count, sub-step dt, prediction horizon) is static
-    pytree metadata and must agree across a stacked grid;
-  * everything else (geometry, kinematics, radio constants, the rush-hour
-    schedule, the outage fraction) is a traced f32 leaf — scalar for one
-    scenario, ``(G,)`` with the grid axis LEADING under the batched engine;
+    (vehicle count, RSU count, sub-step dt, prediction horizon, the convoy
+    index map ``platoon_size``) is static pytree metadata and must agree
+    across a stacked grid;
+  * everything else (geometry, kinematics, radio constants, schedules and
+    envelopes, the outage fraction, the platoon coupling gain, the fleet
+    mixture) is a traced f32 leaf — scalar for one scenario, ``(G,)`` with
+    the grid axis LEADING under the batched engine;
   * all catalog entries therefore share ``n_rsu`` (ring length / RSU
     spacing) so density varies while the compiled program does not.
 """
@@ -49,6 +52,16 @@ _TRACED_FIELDS = (
     "rush_amp",
     "rush_period_s",
     "rsu_outage_frac",
+    "platoon_coupling",
+    "platoon_gap_m",
+    "compute_lognorm_std",
+    "fleet_truck_frac",
+    "fleet_bus_frac",
+    "fleet_truck_factor",
+    "fleet_bus_factor",
+    "day_amp",
+    "day_period_s",
+    "day_harmonic2",
 )
 _STATIC_FIELDS = (
     "num_vehicles",
@@ -57,6 +70,7 @@ _STATIC_FIELDS = (
     "cam_rate_hz",
     "sim_dt_s",
     "predict_horizon_s",
+    "platoon_size",
 )
 
 
@@ -85,12 +99,23 @@ class ScenarioParams:
     rush_amp: jax.Array
     rush_period_s: jax.Array
     rsu_outage_frac: jax.Array
+    platoon_coupling: jax.Array
+    platoon_gap_m: jax.Array
+    compute_lognorm_std: jax.Array
+    fleet_truck_frac: jax.Array
+    fleet_bus_frac: jax.Array
+    fleet_truck_factor: jax.Array
+    fleet_bus_factor: jax.Array
+    day_amp: jax.Array
+    day_period_s: jax.Array
+    day_harmonic2: jax.Array
     num_vehicles: int
     num_lanes: int
     n_rsu: int
     cam_rate_hz: float
     sim_dt_s: float
     predict_horizon_s: float
+    platoon_size: int
 
 
 jax.tree_util.register_dataclass(
@@ -111,7 +136,29 @@ def scenario_params(cfg: TrafficConfig) -> ScenarioParams:
         cam_rate_hz=cfg.cam_rate_hz,
         sim_dt_s=cfg.sim_dt_s,
         predict_horizon_s=cfg.predict_horizon_s,
+        platoon_size=cfg.platoon_size,
     )
+
+
+def data_signature(cfg: TrafficConfig) -> tuple:
+    """Hashable summary of the fields that shape an experiment's client data.
+
+    Client shards derive from the experiment key plus the twin's *spawn
+    layout* (home-region geographic non-iid): for every non-platoon scenario
+    the normalized spawn positions depend on the key alone, so grid rows
+    sharing (strategy, seed) share one ``RoundData`` row.  Platoon spawn
+    regroups vehicles behind convoy leaders — its regions genuinely depend
+    on the convoy geometry — so platoon rows carry their own signature and
+    the engine's data dedup keeps them separate.
+    """
+    if cfg.platoon_coupling > 0.0:
+        return (
+            "platoon",
+            cfg.platoon_size,
+            float(cfg.platoon_gap_m),
+            float(cfg.ring_length_m),
+        )
+    return ()
 
 
 def stack_scenarios(params: Sequence[ScenarioParams]) -> ScenarioParams:
@@ -195,12 +242,79 @@ def rsu_outage(num_vehicles: int = 100, **kw) -> TrafficConfig:
     )
 
 
+def platoon(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Convoy traffic with correlated kinematics: vehicles spawn in
+    ``platoon_size`` convoys trailing their leader at ``platoon_gap_m`` and
+    share ``platoon_coupling`` of their OU acceleration noise, so twin
+    prediction faces spatially correlated motion (whole convoys brake and
+    surge together) and selection sees whole road segments degrade at once."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=15_000.0,
+        rsu_spacing_m=1_500.0,
+        mean_speed_mps=22.0,
+        speed_std_mps=3.0,
+        accel_std=0.9,
+        queue_s_per_vehicle=0.010,
+        platoon_coupling=0.8,
+        platoon_gap_m=30.0,
+        **kw,
+    )
+
+
+def hetero_fleet(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """Mixed sedan/truck/bus fleet: per-client ``compute_factor`` comes from
+    a traced tier mixture (30% trucks at 1.8x, 10% buses at 3.2x the local
+    training time) instead of the single lognormal — the compute-straggler
+    regime where latency-aware election must dodge slow uploaders AND slow
+    trainers."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=11_000.0,
+        rsu_spacing_m=1_100.0,
+        mean_speed_mps=12.0,
+        speed_std_mps=5.0,
+        fleet_truck_frac=0.30,
+        fleet_bus_frac=0.10,
+        fleet_truck_factor=1.8,
+        fleet_bus_factor=3.2,
+        compute_lognorm_std=0.25,
+        **kw,
+    )
+
+
+def day_cycle(num_vehicles: int = 100, **kw) -> TrafficConfig:
+    """A compressed day of commuter waves: rush waves every
+    ``rush_period_s`` ride a Fourier-style ``day_envelope`` (fundamental +
+    second harmonic = morning and evening peaks), so one scan sweeps free
+    flow, shoulder traffic and double-peak saturation — multi-period
+    dynamics in a single experiment."""
+    return TrafficConfig(
+        num_vehicles=num_vehicles,
+        ring_length_m=9_000.0,
+        rsu_spacing_m=900.0,
+        mean_speed_mps=11.0,
+        speed_std_mps=4.0,
+        accel_std=1.0,
+        queue_s_per_vehicle=0.012,
+        rush_amp=1.5,
+        rush_period_s=600.0,
+        day_amp=2.0,
+        day_period_s=7_200.0,
+        day_harmonic2=0.6,
+        **kw,
+    )
+
+
 SCENARIOS: Dict[str, callable] = {
     "ring": ring,
     "highway": highway,
     "urban_grid": urban_grid,
     "rush_hour": rush_hour,
     "rsu_outage": rsu_outage,
+    "platoon": platoon,
+    "hetero_fleet": hetero_fleet,
+    "day_cycle": day_cycle,
 }
 
 

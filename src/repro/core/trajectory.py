@@ -9,6 +9,19 @@ matches the twin's dynamics with the noise zeroed (the best deterministic
 predictor for an OU process): accel decays as exp(-theta * t).  A learned
 GRU could slot in here; for the paper's pipeline the kinematic model is
 sufficient and fully analytic.
+
+Deliberate blind spots (they ARE the experiment, as in the paper):
+
+  * congestion (rush_hour / day_cycle): the predictor propagates free-flow
+    intent while the twin's realized displacement divides by
+    ``congestion_factor`` — prediction overestimates motion at the wave
+    peaks, so election quality degrades exactly when the network is most
+    loaded;
+  * platoon coupling: the shared convoy innovation is zero-mean, so the
+    OU-mean point prediction is unchanged — but prediction *errors*
+    become spatially correlated (a convoy that brakes together is
+    mispredicted together), which stresses per-cluster election far more
+    than iid noise of the same variance.
 """
 from __future__ import annotations
 

@@ -6,6 +6,14 @@ This twin is the explicit substrate (DESIGN.md §5): N CAVs on a multi-lane
 ring road with Ornstein-Uhlenbeck acceleration noise, RSUs at fixed spacing.
 All state transitions are jnp + seeded PRNG — fully reproducible.
 
+Scenario families hook in through traced fields (core/scenarios.py): the
+platoon family correlates OU innovations within convoys (``ou_innovations``)
+and spawns convoy members behind their leader; the hetero_fleet family draws
+per-client ``compute_factor`` from a traced sedan/truck/bus tier mixture
+(``fleet_compute_factors``) consumed by the round economics in
+``fl/rounds.py``; rush_hour / day_cycle drag realized displacement through
+``congestion_factor``.
+
 The transition functions are pure module-level functions (``cfg`` may be a
 concrete ``TrafficConfig`` or a traced ``ScenarioParams``) so the batched
 scan engine can fold them into one jitted program; ``TrafficTwin`` is the
@@ -32,8 +40,79 @@ class TwinState(NamedTuple):
     compute_factor: jax.Array  # (N,) per-client compute heterogeneity (>0)
 
 
+def convoy_ids(cfg, n: int) -> jax.Array:
+    """(N,) int32 convoy membership: vehicle i rides convoy i // size.
+
+    ``platoon_size`` is STATIC (it fixes this index map and therefore the
+    shared-noise array shape); whether convoys actually couple is the traced
+    ``platoon_coupling`` gain, so platoon and independent scenarios batch in
+    one grid program.
+    """
+    size = max(int(getattr(cfg, "platoon_size", 1) or 1), 1)
+    return jnp.arange(n, dtype=jnp.int32) // size
+
+
+def ou_innovations(key: jax.Array, state: TwinState, cfg) -> jax.Array:
+    """(N,) standard-normal OU innovations, convoy-correlated under platoon.
+
+    With coupling c the innovation is ``sqrt(1-c) * own + sqrt(c) * shared``
+    where ``shared`` is one draw per convoy: each vehicle's noise stays
+    standard normal while convoy-mates correlate with coefficient c — the
+    spatially correlated motion the twin predictor must face.  At c == 0
+    (every non-platoon scenario) this is exactly the independent draw.
+    """
+    N = state.pos.shape[0]
+    eps = jax.random.normal(key, (N,))
+    size = max(int(getattr(cfg, "platoon_size", 1) or 1), 1)
+    if size <= 1:
+        return eps
+    c = jnp.clip(
+        jnp.asarray(getattr(cfg, "platoon_coupling", 0.0), jnp.float32), 0.0, 1.0
+    )
+    cid = convoy_ids(cfg, N)
+    n_conv = (N + size - 1) // size
+    shared = jax.random.normal(fold_in_str(key, "platoon"), (n_conv,))[cid]
+    # select, don't blend-by-zero: the independent draw must survive BIT FOR
+    # BIT at c == 0 (XLA fusion of `1*eps + 0*shared` drifts a ulp)
+    return jnp.where(
+        c > 0.0, jnp.sqrt(1.0 - c) * eps + jnp.sqrt(c) * shared, eps
+    )
+
+
+def fleet_compute_factors(cfg, key: jax.Array, n: int) -> jax.Array:
+    """(N,) per-client compute-time multipliers from a traced tier mixture.
+
+    Every client draws within-tier lognormal jitter (median 1x, std
+    ``compute_lognorm_std``); the hetero_fleet family then assigns a
+    sedan/truck/bus tier by traced fractions, multiplying trucks and buses
+    by their tier factors.  With both fractions 0 (the legacy fleet) the
+    tier multiplier is exactly 1.0, bit-identical to the single lognormal.
+    """
+    std = jnp.asarray(getattr(cfg, "compute_lognorm_std", 0.35), jnp.float32)
+    base = jnp.exp(std * jax.random.normal(key, (n,)))
+    bus = jnp.asarray(getattr(cfg, "fleet_bus_frac", 0.0), jnp.float32)
+    truck = jnp.asarray(getattr(cfg, "fleet_truck_frac", 0.0), jnp.float32)
+    u = jax.random.uniform(fold_in_str(key, "fleet-tier"), (n,))
+    tier = jnp.where(
+        u < bus,
+        jnp.asarray(getattr(cfg, "fleet_bus_factor", 1.0), jnp.float32),
+        jnp.where(
+            u < bus + truck,
+            jnp.asarray(getattr(cfg, "fleet_truck_factor", 1.0), jnp.float32),
+            1.0,
+        ),
+    )
+    return base * tier
+
+
 def init_twin_state(cfg, key: jax.Array) -> TwinState:
-    """Fresh ground-truth state (``key`` is the twin's init key)."""
+    """Fresh ground-truth state (``key`` is the twin's init key).
+
+    Pure jnp with ``cfg`` either a concrete ``TrafficConfig`` or a traced
+    ``ScenarioParams`` — the batched engine vmaps this inside its compiled
+    grid program (device-resident init), so nothing here may branch on a
+    traced value with Python control flow.
+    """
     k1, k2, k3, k4 = jax.random.split(key, 4)
     N = cfg.num_vehicles
     pos = jax.random.uniform(k1, (N,), jnp.float32, 0.0, cfg.ring_length_m)
@@ -43,8 +122,25 @@ def init_twin_state(cfg, key: jax.Array) -> TwinState:
         2.5 * cfg.mean_speed_mps,
     )
     lane = jax.random.randint(k3, (N,), 0, cfg.num_lanes)
-    # lognormal compute heterogeneity: median 1x, some clients 2-3x slower
-    compute = jnp.exp(0.35 * jax.random.normal(k4, (N,)))
+    # compute heterogeneity: lognormal jitter x traced sedan/truck/bus tiers
+    compute = fleet_compute_factors(cfg, k4, N)
+    # platoon spawn: convoy members trail their leader at platoon_gap_m with
+    # the leader's speed; blended by the traced coupling so non-platoon
+    # scenarios keep the independent uniform spawn bit for bit
+    size = max(int(getattr(cfg, "platoon_size", 1) or 1), 1)
+    if size > 1:
+        cid = convoy_ids(cfg, N)
+        rank = jnp.arange(N, dtype=jnp.int32) % size
+        leader = jnp.minimum(cid * size, N - 1)
+        gap = jnp.asarray(getattr(cfg, "platoon_gap_m", 25.0), jnp.float32)
+        conv_pos = jnp.mod(
+            pos[leader] - rank.astype(jnp.float32) * gap, cfg.ring_length_m
+        )
+        coupled = (
+            jnp.asarray(getattr(cfg, "platoon_coupling", 0.0), jnp.float32) > 0.0
+        )
+        pos = jnp.where(coupled, conv_pos, pos)
+        speed = jnp.where(coupled, speed[leader], speed)
     return TwinState(
         t=jnp.zeros((), jnp.float32),
         pos=pos,
@@ -57,8 +153,7 @@ def init_twin_state(cfg, key: jax.Array) -> TwinState:
 
 def twin_step(state: TwinState, cfg, key: jax.Array, dt: float) -> TwinState:
     """One OU + kinematic integration step of ``dt`` seconds."""
-    N = state.pos.shape[0]
-    eps = jax.random.normal(key, (N,))
+    eps = ou_innovations(key, state, cfg)
     accel = (
         state.accel
         - cfg.ou_theta * state.accel * dt
@@ -101,8 +196,7 @@ def advance_twin(
         )
 
         def body(i, s):
-            N = s.pos.shape[0]
-            eps = jax.random.normal(jax.random.fold_in(key, i), (N,))
+            eps = ou_innovations(jax.random.fold_in(key, i), s, cfg)
             accel = s.accel * decay + noise_std * eps
             speed = jnp.clip(s.speed + accel * dt, 1.0, 3.0 * cfg.mean_speed_mps)
             v_eff = speed / congestion_factor(s.t, cfg)  # rush-hour drag

@@ -14,12 +14,15 @@ from repro.fl.rounds import (
     RoundRecord,
     RoundState,
     STRATEGY_ORDER,
+    experiment_key,
     init_experiment,
     init_state,
+    init_state_traced,
     make_round_data,
     make_round_step,
     make_warmup,
     metrics_to_records,
+    regions_of,
 )
 from repro.fl.engine import ExperimentEngine, GridResult
 from repro.fl.simulation import FLSimulation, time_to_accuracy
@@ -36,8 +39,11 @@ __all__ = [
     "RoundRecord",
     "RoundState",
     "STRATEGY_ORDER",
+    "experiment_key",
     "init_experiment",
     "init_state",
+    "init_state_traced",
+    "regions_of",
     "make_round_data",
     "make_round_step",
     "make_warmup",

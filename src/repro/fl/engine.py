@@ -17,18 +17,25 @@ round.  This engine runs a whole grid as a single XLA program:
     materializes every unique (strategy, seed) row — scenario-heavy grids
     shard perfectly, seed-heavy grids are still bounded by the unique-pair
     data footprint per device);
+  * experiment INIT is device-resident too (``init_on_device=True``, the
+    default): ``run_grid`` setup reduces to pure key stacking — the host
+    folds one experiment key per row and the compiled program runs
+    ``rounds.init_state_traced`` (model-param init + twin seeding) under
+    the same vmap/shard_map, so host setup cost is independent of grid
+    size and no parameter tree is ever allocated host-side (the round
+    step's flat layout comes from a ``jax.eval_shape`` trace);
   * client shards are partitioned ON DEVICE inside the compiled program
-    (``partition_on_device=True``, the default): the host stacks only
-    per-experiment PRNG keys + (C,) region ids and ``rounds.make_round_data``
-    materializes the (C, n, H, W, ch) shards per unique (strategy, seed)
-    under jit, so grid size is bounded by device memory, not host RAM;
+    (``partition_on_device=True``, the default): ``rounds.make_round_data``
+    materializes the (C, n, H, W, ch) shards per unique data row under
+    jit, so grid size is bounded by device memory, not host RAM;
   * per-round test evaluation is hoisted to every ``eval_every`` rounds
     (the final round always evaluates).
 
 Shape conventions: the grid axis G is the LEADING dim of every stacked
-leaf (states, scenario params, strategy indices, metrics); ``RoundData``
-rows are deduplicated to one per unique (strategy, seed) and gathered
-per lane by ``data_idx``.  Selection inside the round core is mask-based
+leaf (experiment keys / states, scenario params, strategy indices,
+metrics); ``RoundData`` rows are deduplicated to one per unique
+(strategy, seed, ``scenarios.data_signature``) and gathered per lane by
+``data_idx``.  Selection inside the round core is mask-based
 and fixed-size; updates travel in the flat (K, P) layout (see
 ``repro.fl.rounds``).
 
@@ -58,21 +65,31 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
-from repro.core.scenarios import scenario_config, scenario_params, stack_scenarios
+from repro.core.scenarios import (
+    ScenarioParams,
+    data_signature,
+    scenario_config,
+    scenario_params,
+    stack_scenarios,
+)
 from repro.fl.rounds import (
     RoundData,
     RoundMetrics,
+    RoundState,
     RoundRecord,
     cohort_size_for,
+    derive_regions,
+    experiment_key,
     flat_spec_of,
     init_state,
+    init_state_traced,
     make_round_data,
     make_round_step,
     make_warmup,
     metrics_to_records,
 )
 from repro.models import build_model
-from repro.sharding import SHARD_MAP_NO_CHECK, TRAIN_RULES, resolve_pspec, shard_map
+from repro.sharding import SHARD_MAP_NO_CHECK, TRAIN_RULES, resolve_pspec, shard_map, split_params
 from repro.utils import tree_bytes
 
 ScenarioLike = Union[str, TrafficConfig]
@@ -122,6 +139,7 @@ class ExperimentEngine:
         num_clients: Optional[int] = None,
         mesh=None,
         partition_on_device: bool = True,
+        init_on_device: bool = True,
     ):
         if num_clients is not None:
             fl_cfg = dataclasses.replace(fl_cfg, num_clients=num_clients)
@@ -132,11 +150,18 @@ class ExperimentEngine:
         self.cohort_size = cohort_size_for(fl_cfg, self.strategies)
         self.mesh = mesh
         self.partition_on_device = partition_on_device
+        # device-resident init needs device-resident data (regions are a
+        # twin-init by-product); host data stacking implies host init
+        self.init_on_device = bool(init_on_device and partition_on_device)
         self._round_step = None
         self._grid_fn = jax.jit(self._grid, static_argnames=("warm",))
         self._sharded_fn = None  # built lazily once the padded spec is known
 
     # -- lazy build: model bytes / flat spec need a concrete param tree ----
+    def _init_params(self, key):
+        """key -> plain-array params pytree (the traced model init)."""
+        return split_params(self.api.init(key))[0]
+
     def _ensure_step(self, params):
         if self._round_step is None:
             self.model_bytes = float(tree_bytes(params))
@@ -148,16 +173,43 @@ class ExperimentEngine:
             self._warmup = make_warmup(self.api.loss, self.fl)
         return self._round_step
 
+    def _ensure_spec(self):
+        """Build the round step from an abstract model-init trace.
+
+        The device-resident setup path never initializes params on the host
+        — per-row init happens inside the compiled grid program — but the
+        compiled step needs the parameter byte count and flat layout, which
+        only depend on shapes: ``jax.eval_shape`` traces the init without
+        allocating a single parameter.  Host work is therefore independent
+        of grid size (the host-allocation test counts init calls).
+        """
+        if self._round_step is None:
+            self._ensure_step(
+                jax.eval_shape(self._init_params, jax.random.key(0))
+            )
+
     def _traffic_of(self, scenario: ScenarioLike) -> TrafficConfig:
         if isinstance(scenario, TrafficConfig):
-            return scenario
-        return scenario_config(scenario, num_vehicles=self.fl.num_clients)
+            tc = scenario
+        else:
+            tc = scenario_config(scenario, num_vehicles=self.fl.num_clients)
+        if tc.num_vehicles != self.fl.num_clients:
+            raise ValueError(
+                "every FL client is a CAV: num_clients "
+                f"({self.fl.num_clients}) must equal num_vehicles "
+                f"({tc.num_vehicles})"
+            )
+        return tc
 
     def init_run(self, strategy: str, seed: int, scenario: ScenarioLike):
         """Host-side build of one grid row: (state, data, scn, strategy_idx).
 
-        ``data`` is a full ``RoundData`` on the host path, or the tiny
-        (key, regions) seed the compiled program expands on device.
+        The legacy (``init_on_device=False``) path: params + twin are
+        initialized eagerly per row.  ``data`` is a full ``RoundData`` on
+        the host-partition path, or the tiny (key, regions) seed the
+        compiled program expands on device.  The default engine never calls
+        this — ``run_grid`` stacks experiment keys and the compiled program
+        runs ``init_state_traced`` itself.
         """
         tc = self._traffic_of(scenario)
         state, regions = init_state(
@@ -206,21 +258,53 @@ class ExperimentEngine:
     def _materialize(self, datas) -> RoundData:
         """Expand on-device data seeds into stacked RoundData rows (no-op on
         the host path).  Runs inside jit: one traced partition per unique
-        (strategy, seed) — never a host-materialized copy."""
+        data row — never a host-materialized copy.
+
+        Two seed forms: ``(keys, regions)`` (host init computed the regions
+        eagerly) and ``(keys, ScenarioParams)`` (device-resident init: the
+        (C,) home regions are re-derived from the twin spawn inside the
+        program, so the host never touches a vehicle position either).
+        """
         if isinstance(datas, RoundData):
             return datas
-        keys, regions = datas
+        keys, aux = datas
+        if isinstance(aux, ScenarioParams):
+            def one(k, scn):
+                return make_round_data(
+                    k, self.dataset, self.fl, derive_regions(k, scn)
+                )
+
+            return jax.vmap(one)(keys, aux)
         return jax.vmap(
             lambda k, r: make_round_data(k, self.dataset, self.fl, r)
-        )(keys, regions)
+        )(keys, aux)
+
+    def _init_states(self, states, scns):
+        """Stacked initial RoundStates — built in-program under device init.
+
+        ``states`` is either the host-stacked RoundState pytree (legacy
+        path, returned as-is) or the (G,) stacked experiment keys: one
+        vmapped ``init_state_traced`` then folds model-param init + twin
+        seeding into the compiled grid program, so ``run_grid`` setup is
+        pure key stacking.
+        """
+        if isinstance(states, RoundState):
+            return states
+        return jax.vmap(
+            lambda k, scn: init_state_traced(
+                self._init_params, self.fl, scn, k
+            )[0]
+        )(states, scns)
 
     def _grid(self, states, datas, scns, strat_idx, data_idx, flags,
               warm: bool = True):
         # ``datas`` is unbatched (in_axes=None): rows differing only by
         # scenario share byte-identical client shards + test sets (the
-        # experiment key folds strategy/seed/dataset, never the scenario),
-        # so it holds one row per unique (strategy, seed) and each lane
-        # gathers its row by ``data_idx`` — not one copy per grid cell.
+        # experiment key folds strategy/seed/dataset, never the scenario;
+        # platoon spawn regroups regions, so its rows carry their own
+        # ``data_signature``), so it holds one row per unique signature and
+        # each lane gathers its row by ``data_idx`` — not one per grid cell.
+        states = self._init_states(states, scns)
         datas = self._materialize(datas)
         step = self._round_step
 
@@ -257,20 +341,38 @@ class ExperimentEngine:
         states, scn_list, sidx = [], [], []
         data_rows, data_row_of, didx = [], {}, []
         for strategy, seed, scenario in runs:
-            st, da, scn, si = self.init_run(strategy, seed, scenario)
+            tc = self._traffic_of(scenario)
+            if self.init_on_device:
+                # pure key stacking: model init + twin seeding + client
+                # partitioning all happen inside the compiled grid program
+                self._ensure_spec()
+                st = experiment_key(self.dataset, strategy, seed)
+                scn = scenario_params(tc)
+                si = self.strategies.index(strategy)
+                da = (st, scn)
+            else:
+                st, da, scn, si = self.init_run(strategy, seed, scenario)
             states.append(st)
             scn_list.append(scn)
             sidx.append(si)
-            # client shards/test set depend on (strategy, seed) only; keep
-            # one stacked row per unique pair (see _grid)
-            pair = (strategy, seed)
+            # client shards/test set depend on (strategy, seed) plus the
+            # spawn-layout signature (platoon regroups regions); keep one
+            # stacked row per unique triple (see _grid)
+            pair = (strategy, seed, data_signature(tc))
             if pair not in data_row_of:
                 data_row_of[pair] = len(data_rows)
                 data_rows.append(da)
             didx.append(data_row_of[pair])
         stack = lambda *xs: jnp.stack(xs)
-        states = jax.tree_util.tree_map(stack, *states)
-        datas = jax.tree_util.tree_map(stack, *data_rows)
+        if self.init_on_device:
+            states = jnp.stack(states)
+            datas = (
+                jnp.stack([k for k, _ in data_rows]),
+                stack_scenarios([s for _, s in data_rows]),
+            )
+        else:
+            states = jax.tree_util.tree_map(stack, *states)
+            datas = jax.tree_util.tree_map(stack, *data_rows)
         scns = stack_scenarios(scn_list)
         strat_idx = jnp.asarray(sidx, jnp.int32)
         data_idx = jnp.asarray(didx, jnp.int32)

@@ -21,8 +21,13 @@ Every function here is a pure function of (key, static config, traced
 ``regions``), which is what lets the batched engine build client shards
 ON DEVICE inside its compiled grid program (``repro.fl.rounds
 .make_round_data``) instead of host-materializing one (C, n, H, W, ch)
-copy per (strategy, seed) — grids then scale past host RAM: the host only
-ever stacks per-experiment PRNG keys and (C,) region ids.
+copy per data row — grids then scale past host RAM: the host only ever
+stacks per-experiment PRNG keys (under device-resident init even the
+(C,) region ids are re-derived in-program from the twin spawn).  Data
+rows are deduplicated per (strategy, seed, ``scenarios.data_signature``):
+the signature is what lets platoon scenarios — whose convoy spawn
+regroups the home regions — carry their own shards while every other
+scenario mix keeps sharing one row per (strategy, seed).
 """
 from __future__ import annotations
 

@@ -47,7 +47,7 @@ from repro.core.rttg import build_rttg
 from repro.core.selection import STRATEGIES
 from repro.core.clustering import kmeans_cluster, update_sketch
 from repro.core.trajectory import predict_rttg
-from repro.core.twin import TrafficTwin, advance_twin
+from repro.core.twin import advance_twin, init_twin_state
 from repro.fl.client import make_local_trainer
 from repro.fl.partition import make_test_set, partition_clients
 from repro.fl.server import apply_delta, normalized_weights
@@ -130,32 +130,65 @@ def flat_spec_of(params) -> Any:
     return (treedef, [x.shape for x in leaves], [x.dtype for x in leaves])
 
 
-def init_state(
-    api,
-    fl: FLConfig,
-    traffic_cfg: TrafficConfig,
-    dataset: str,
-    strategy: str,
-    key: jax.Array,
+def experiment_key(dataset: str, strategy: str, seed: int) -> jax.Array:
+    """The per-experiment base PRNG key (``RoundState.key``).
+
+    Folds strategy + dataset into the seed's key — NEVER the scenario, so
+    rows differing only by scenario share data streams (the engine's
+    RoundData dedup relies on this).  This fold is the ONLY host-side
+    per-row work the device-resident engine setup does: ``run_grid`` stacks
+    these keys and everything else happens inside the compiled program.
+    """
+    return fold_in_str(jax.random.key(seed), f"fl-sim/{strategy}/{dataset}")
+
+
+def regions_of(pos: jax.Array, cfg, n_regions: int = 10) -> jax.Array:
+    """(C,) int32 home road region per CAV (geographic non-iid ownership).
+
+    Class ownership follows the home road region — scenes/scenarios are
+    spatially correlated in C-ITS (DESIGN.md §9).
+    """
+    return jnp.floor(
+        pos / cfg.ring_length_m * n_regions
+    ).astype(jnp.int32) % n_regions
+
+
+def twin_init_key(key: jax.Array) -> jax.Array:
+    """THE fold chain from an experiment key to its twin-init key.
+
+    Single source shared by ``init_state_traced`` and the engine's
+    device-side data materialization (``derive_regions``): the regions a
+    data row is partitioned by must come from the same twin spawn the
+    experiment actually runs.
+    """
+    return fold_in_str(fold_in_str(key, "traffic-twin"), "init")
+
+
+def derive_regions(key: jax.Array, scn) -> jax.Array:
+    """(C,) home regions straight from the experiment key (traced)."""
+    return regions_of(init_twin_state(scn, twin_init_key(key)).pos, scn)
+
+
+def init_state_traced(
+    init_params, fl: FLConfig, scn, key: jax.Array
 ) -> Tuple[RoundState, jax.Array]:
     """Build one experiment's initial ``RoundState`` plus its (C,) regions.
+
+    Pure and traceable: ``init_params`` is a ``key -> params pytree``
+    function (plain arrays, e.g. ``split_params(api.init(k))[0]``), ``scn``
+    a concrete ``TrafficConfig`` or traced ``ScenarioParams``, ``key`` the
+    pre-folded experiment key (``experiment_key``).  The batched engine
+    vmaps this inside its compiled grid program so grid setup is pure key
+    stacking; the host path (``init_state``) calls the SAME function
+    eagerly — identical folds, bitwise-identical states.
 
     Cheap (model params + twin kinematics only); the heavy client shards
     are a separate step (``make_round_data``) so the batched engine can
     defer them to the device inside its compiled grid program.
     """
-    assert fl.num_clients == traffic_cfg.num_vehicles, (
-        "every FL client is a CAV: num_clients must equal num_vehicles"
-    )
-    key = fold_in_str(key, f"fl-sim/{strategy}/{dataset}")
-    params, _ = split_params(api.init(fold_in_str(key, "model-init")))
-    twin_state = TrafficTwin(traffic_cfg, key).init_state()
-    # geographic non-iid: class ownership follows the home road region
-    # (scenes/scenarios are spatially correlated in C-ITS; DESIGN.md §9)
-    n_regions = 10
-    regions = jnp.floor(
-        twin_state.pos / traffic_cfg.ring_length_m * n_regions
-    ).astype(jnp.int32) % n_regions
+    params = init_params(fold_in_str(key, "model-init"))
+    twin_state = init_twin_state(scn, twin_init_key(key))
+    regions = regions_of(twin_state.pos, scn)
     N = fl.num_clients
     state = RoundState(
         params=params,
@@ -168,6 +201,43 @@ def init_state(
         key=key,
     )
     return state, regions
+
+
+def init_state(
+    api,
+    fl: FLConfig,
+    traffic_cfg: TrafficConfig,
+    dataset: str,
+    strategy: str,
+    key: jax.Array,
+) -> Tuple[RoundState, jax.Array]:
+    """Host-side build of one experiment's initial state (legacy loop path).
+
+    Thin wrapper over ``init_state_traced`` with the strategy/dataset fold
+    applied, run under jit — the device-resident engine path vmaps the same
+    traced core, and jitted-single vs jitted-vmapped round identically
+    (eager would round `mean + std * eps` without the FMA contraction), so
+    the two inits are bitwise-identical (tests/test_engine.py parity).
+    """
+    assert fl.num_clients == traffic_cfg.num_vehicles, (
+        "every FL client is a CAV: num_clients must equal num_vehicles"
+    )
+    key = fold_in_str(key, f"fl-sim/{strategy}/{dataset}")
+    return _jitted_init(api, fl, traffic_cfg)(key)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_init(api, fl: FLConfig, traffic_cfg: TrafficConfig):
+    """One compiled host init per (api, fl, traffic) — repeated host-path
+    inits (legacy grids, parity sweeps) reuse it instead of paying a fresh
+    trace per call.  All three cache keys are hashable: the configs are
+    frozen dataclasses, the api a NamedTuple of functions (identity-keyed,
+    like jit's own function cache)."""
+    return jax.jit(
+        lambda k: init_state_traced(
+            lambda kk: split_params(api.init(kk))[0], fl, traffic_cfg, k
+        )
+    )
 
 
 def make_round_data(

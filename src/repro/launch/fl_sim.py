@@ -5,9 +5,12 @@
       --classes-per-client 2 --out artifacts/fl/mnist_contextual.json
 
 ``--scenario`` selects any entry of the ``repro.core.scenarios`` catalog —
-steady densities (ring / highway / urban_grid) plus the time-varying
-``rush_hour`` and infrastructure-failure ``rsu_outage`` families (see
-docs/scenarios.md).  Whole (strategy x seed x scenario) sweeps should use
+steady densities (ring / highway / urban_grid), the time-varying
+``rush_hour`` / ``day_cycle`` schedules, infrastructure-failure
+``rsu_outage``, convoy-correlated ``platoon`` and compute-tier
+``hetero_fleet`` families (see docs/scenarios.md).  An unknown name fails
+fast with the registered catalog.  Whole (strategy x seed x scenario)
+sweeps should use
 ``repro.fl.engine.ExperimentEngine`` directly: it batches the grid into
 one device-resident program and shards it over a mesh when given one.
 """
@@ -43,6 +46,11 @@ def run_experiment(
     predict_horizon_s: float | None = None,
     scenario: str = "ring",
 ):
+    if scenario not in SCENARIOS:
+        raise ValueError(
+            f"unknown scenario {scenario!r}; registered catalog: "
+            f"{', '.join(sorted(SCENARIOS))} (see docs/scenarios.md to add one)"
+        )
     model_cfg = get_config(PAPER_MODEL_BY_DATASET[dataset])
     # paper §IV-A: 3 local epochs on MNIST, 1 on CIFAR-10/SVHN
     epochs = local_epochs if local_epochs is not None else (3 if dataset == "mnist" else 1)
@@ -74,20 +82,27 @@ def run_experiment(
     }
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="mnist", choices=sorted(PAPER_MODEL_BY_DATASET))
     ap.add_argument("--strategy", default="contextual", choices=sorted(STRATEGIES))
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--connection-rate", type=float, default=1.0)
-    ap.add_argument("--scenario", default="ring", choices=sorted(SCENARIOS))
+    # no argparse ``choices``: the catalog error below lists the registered
+    # names itself (and stays correct for programmatic run_experiment calls)
+    ap.add_argument("--scenario", default="ring")
     ap.add_argument("--classes-per-client", type=int, default=2)
     ap.add_argument("--num-clients", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--time-budget", type=float, default=None)
     ap.add_argument("--out", default="")
     ap.add_argument("--quiet", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    if args.scenario not in SCENARIOS:
+        ap.error(
+            f"unknown scenario {args.scenario!r}; registered catalog: "
+            f"{', '.join(sorted(SCENARIOS))}"
+        )
 
     result = run_experiment(
         args.dataset, args.strategy, args.rounds, args.connection_rate,

@@ -9,3 +9,17 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 # NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device;
 # only launch/dryrun.py forces 512 placeholder devices (system requirement).
+
+import pytest  # noqa: E402
+
+
+def pytest_collection_modifyitems(items):
+    """``tier1`` is an alias marker: everything not marked ``slow``.
+
+    ``pytest -m tier1`` therefore selects exactly the fast verification
+    tier (same set as ``-m "not slow"``), so CI configs can name the tier
+    positively and new slow tests stay excluded by construction.
+    """
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.tier1)

@@ -1,0 +1,51 @@
+"""Tier-1 wiring for the benchmark smoke path.
+
+The engine throughput bench is where grid-scale regressions (compile blowups,
+broken scenario batching, device-init fallout) used to surface — but only in
+manual runs.  ``engine_throughput.smoke()`` drives the SAME code path (full
+scenario catalog, device-resident init + partitioning, one vmapped program)
+at 1 round / tiny fleet, so tier-1 fails fast instead.
+"""
+import os
+import sys
+
+import numpy as np
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+# benchmarks/ is a repo-root package (python -m benchmarks.run); make it
+# resolvable no matter how pytest was invoked
+sys.path.insert(0, REPO)
+
+
+def test_engine_throughput_smoke_covers_catalog():
+    """--smoke sweeps every registered scenario in one batched program."""
+    from benchmarks import engine_throughput
+    from repro.core.scenarios import SCENARIOS
+
+    # the bench grid must track the catalog: a scenario registered but not
+    # benched would dodge both tiers
+    assert set(engine_throughput.SCENARIOS) == set(SCENARIOS)
+
+    r = engine_throughput.smoke(num_clients=8, samples=32)
+    assert r["grid"] == len(SCENARIOS)
+    assert r["total_rounds"] == len(SCENARIOS)
+    accs = list(r["final_acc"].values())
+    assert len(accs) == len(SCENARIOS)
+    assert np.all(np.isfinite(accs))
+
+
+def test_engine_throughput_main_smoke_mode():
+    """``main(smoke_mode=True)`` (the --smoke CLI) routes to the probe and
+    never touches the timing cache."""
+    from benchmarks import engine_throughput
+    from benchmarks.common import cached
+
+    called = []
+    orig = engine_throughput.smoke
+    engine_throughput.smoke = lambda *a, **k: (called.append(1) or {"grid": 0})
+    try:
+        r = engine_throughput.main(smoke_mode=True)
+    finally:
+        engine_throughput.smoke = orig
+    assert called and r == {"grid": 0}
+    assert cached is not None  # import still intact for the timed path

@@ -75,8 +75,11 @@ def test_documented_scenarios_and_strategies_registered():
     from repro.core.selection import STRATEGIES
 
     text = " ".join(_doc_text(d) for d in DOC_FILES)
-    for name in ("ring", "highway", "urban_grid", "rush_hour", "rsu_outage"):
+    for name in ("ring", "highway", "urban_grid", "rush_hour", "rsu_outage",
+                 "platoon", "hetero_fleet", "day_cycle"):
         assert name in SCENARIOS, f"documented scenario {name} not registered"
+    # the whole registered catalog must be documented (new families included)
+    for name in SCENARIOS:
         assert name in text, f"registered scenario {name} undocumented"
     for name in ("greedy", "gossip", "data", "network", "contextual"):
         assert name in STRATEGIES

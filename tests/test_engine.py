@@ -7,9 +7,12 @@ parity test therefore checks the scan/host-loop equivalence of the entire
 pipeline (fusion -> prediction -> clustering -> election -> cohort training
 -> Pallas FedAvg -> round economics) end to end.
 
-Also covered here: on-device vs host client partitioning equivalence,
-mesh-sharded vs vmapped grid parity (subprocess, fake multi-device), and
-the rush_hour / rsu_outage scenario families.
+Also covered here: device-resident vs host init parity (bitwise) and the
+pure-key-stacking allocation guard, on-device vs host client partitioning
+equivalence, mesh-sharded vs vmapped grid parity (subprocess, fake
+multi-device), a mixed grid spanning the FULL scenario catalog, and the
+semantics of the rush_hour / rsu_outage / platoon / hetero_fleet /
+day_cycle families.
 """
 import os
 import subprocess
@@ -182,6 +185,167 @@ def test_single_device_mesh_falls_back_to_vmap():
         _records_close(a, b)
 
 
+def test_device_init_matches_host_bitwise():
+    """Tentpole parity: the compiled program's vmapped ``init_state_traced``
+    produces bitwise-identical RoundState + regions to the host-side
+    ``init_state``, per strategy and per scenario — so folding init into
+    the grid program changes nothing but where the work runs."""
+    from repro.fl.rounds import experiment_key, init_state, init_state_traced
+
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual", "gossip"))
+    eng._ensure_spec()
+    runs = [(st, sc) for st in ("contextual", "gossip") for sc in sorted(SCENARIOS)]
+    keys = jnp.stack([experiment_key("mnist", st, 3) for st, _ in runs])
+    scns = stack_scenarios([
+        scenario_params(scenario_config(sc, num_vehicles=FL.num_clients))
+        for _, sc in runs
+    ])
+    dev_states, dev_regions = jax.jit(jax.vmap(
+        lambda k, s: init_state_traced(eng._init_params, eng.fl, s, k)
+    ))(keys, scns)
+    for g, (strategy, scen) in enumerate(runs):
+        tc = scenario_config(scen, num_vehicles=FL.num_clients)
+        host_state, host_regions = init_state(
+            eng.api, eng.fl, tc, "mnist", strategy, jax.random.key(3)
+        )
+        dev_state = jax.tree_util.tree_map(lambda x: x[g], dev_states)
+        host_leaves = jax.tree_util.tree_leaves_with_path(host_state)
+        dev_leaves = jax.tree_util.tree_leaves(dev_state)
+        for (path, a), b in zip(host_leaves, dev_leaves):
+            if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{strategy}/{scen}: {jax.tree_util.keystr(path)}",
+            )
+        np.testing.assert_array_equal(
+            np.asarray(host_regions), np.asarray(dev_regions[g]),
+            err_msg=f"{strategy}/{scen}: regions",
+        )
+
+
+def test_host_setup_is_pure_key_stacking():
+    """Tentpole allocation guard: device-resident setup never initializes
+    model params on the host — ``api.init`` is entered once for the
+    eval_shape spec trace and once inside the compiled program's trace,
+    INDEPENDENT of grid size (the legacy path paid one init per row)."""
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+    assert eng.init_on_device
+    calls = []
+    real_init = eng.api.init
+
+    def counting_init(key):
+        calls.append(1)
+        return real_init(key)
+
+    eng.api = eng.api._replace(init=counting_init)
+    res = eng.run_grid(seeds=(0, 1, 2), scenarios=("ring", "urban_grid"),
+                       rounds=1, eval_every=1)
+    assert len(res.runs) == 6
+    assert len(calls) <= 2, (
+        f"api.init entered {len(calls)} times for a 6-row grid: host setup "
+        "is no longer pure key stacking"
+    )
+    assert np.all(np.isfinite(np.asarray(res.metrics.test_acc)[:, -1]))
+
+
+def test_mixed_grid_spans_full_catalog():
+    """Satellite: EVERY registered scenario family — old and new — batches
+    into ONE compiled vmapped program (the static-geometry constraint
+    holds catalog-wide)."""
+    names = sorted(SCENARIOS)
+    assert len(names) >= 8
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+    res = eng.run_grid(seeds=(0,), scenarios=names, rounds=2, eval_every=2)
+    assert [r[2] for r in res.runs] == names
+    st = np.asarray(res.metrics.sim_time)
+    assert np.all(np.isfinite(st)) and np.all(np.diff(st, axis=1) > 0)
+    assert np.all(np.isfinite(np.asarray(res.metrics.test_acc)[:, -1]))
+    # scenario families genuinely diverge: no two rows share a trajectory
+    for i in range(len(names)):
+        for j in range(i + 1, len(names)):
+            assert not np.allclose(st[i], st[j]), (names[i], names[j])
+
+
+def test_platoon_semantics():
+    """Convoys spawn together and (at full coupling) move as one: within-
+    convoy speed spread collapses while across-convoy spread persists."""
+    import dataclasses
+
+    from repro.core.twin import advance_twin, convoy_ids, init_twin_state
+
+    tc = scenario_config("platoon", num_vehicles=16)
+    full = dataclasses.replace(tc, platoon_coupling=1.0)
+    state = init_twin_state(full, jax.random.key(0))
+    size = full.platoon_size
+    cid = np.asarray(convoy_ids(full, 16))
+    # spawn: members trail their leader inside (size-1)*gap metres
+    pos = np.asarray(state.pos)
+    for c in range(16 // size):
+        member = pos[cid == c]
+        spread = np.max(member) - np.min(member)
+        ring = full.ring_length_m
+        spread = min(spread, ring - spread)  # ring wrap
+        assert spread <= (size - 1) * full.platoon_gap_m + 1e-3
+    # full coupling: convoy-mates share the OU innovation stream exactly
+    adv = advance_twin(state, full, jax.random.key(7), 20.0, num_substeps=15)
+    speed = np.asarray(adv.speed)
+    within = [np.ptp(speed[cid == c]) for c in range(16 // size)]
+    assert max(within) < 1e-4, within
+    assert np.ptp([speed[cid == c].mean() for c in range(16 // size)]) > 0.1
+    # zero coupling restores independent motion
+    indep = dataclasses.replace(tc, platoon_coupling=0.0)
+    st0 = init_twin_state(indep, jax.random.key(0))
+    adv0 = advance_twin(st0, indep, jax.random.key(7), 20.0, num_substeps=15)
+    sp0 = np.asarray(adv0.speed)
+    assert min(np.ptp(sp0[cid == c]) for c in range(16 // size)) > 1e-3
+
+
+def test_hetero_fleet_semantics():
+    """The traced tier mixture produces a slow-tail compute distribution;
+    steady scenarios keep the pure lognormal."""
+    from repro.core.twin import init_twin_state
+
+    n = 400
+    hf = scenario_config("hetero_fleet", num_vehicles=n)
+    ring_cf = np.asarray(
+        init_twin_state(scenario_config("ring", num_vehicles=n),
+                        jax.random.key(2)).compute_factor
+    )
+    hf_cf = np.asarray(init_twin_state(hf, jax.random.key(2)).compute_factor)
+    # ~10% buses at 3.2x: the slow tail exists and is roughly the bus share
+    slow_frac = float((hf_cf > 2.5).mean())
+    assert 0.04 < slow_frac < 0.25, slow_frac
+    assert hf_cf.mean() > ring_cf.mean() * 1.15
+    # the bus tier (3.2x) is visible as a detached slow cluster
+    assert float((hf_cf > 2.8).sum()) > 0
+
+
+def test_day_cycle_semantics():
+    """The Fourier envelope modulates wave peaks through the day: free flow
+    at t=0, and a mid-day wave peak exceeds an early-morning one."""
+    import dataclasses
+
+    from repro.core.rttg import congestion_factor, day_envelope
+
+    dc = scenario_params(scenario_config("day_cycle", num_vehicles=12))
+    assert float(congestion_factor(0.0, dc)) == pytest.approx(1.0)
+    T, P = float(dc.day_period_s), float(dc.rush_period_s)
+    # wave peaks sit at odd multiples of P/2; compare one near t~0 with one
+    # near the day fundamental's peak (t ~ T/2)
+    early = float(congestion_factor(0.5 * P, dc))
+    midday = float(congestion_factor(T / 2 + 0.5 * P - (T / 2) % P, dc))
+    assert midday > early * 1.5
+    # a steady-amp config (day_amp=0) keeps the flat-peak schedule exactly
+    flat = scenario_params(dataclasses.replace(
+        scenario_config("day_cycle", num_vehicles=12), day_amp=0.0
+    ))
+    assert float(day_envelope(123.0, flat)) == 1.0
+    assert float(congestion_factor(0.5 * P, flat)) == pytest.approx(
+        1.0 + float(flat.rush_amp)
+    )
+
+
 def test_rush_hour_and_outage_semantics():
     """The new scenario families change the physics the right way."""
     from repro.core.network import latency_model
@@ -222,6 +386,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import numpy as np, jax
     from repro.config import FLConfig, ModelConfig
+    from repro.core.scenarios import SCENARIOS
     from repro.fl.engine import ExperimentEngine
     from repro.launch.mesh import make_grid_mesh
 
@@ -230,9 +395,12 @@ _SHARDED_SCRIPT = textwrap.dedent("""
                       image_shape=(28, 28, 1), num_classes=10, channels=())
     FL = FLConfig(num_clients=12, samples_per_client=64, local_epochs=1,
                   num_clusters=4, batch_size=32, recluster_every=2)
-    # G=6 rows on 4 shards: exercises the pad-to-shard-count + slice-back path
-    kw = dict(seeds=(0, 1, 2), scenarios=("ring", "rush_hour"), rounds=3,
+    # the FULL catalog (old + new families) as one sharded grid: G=8 rows on
+    # 4 shards, device-resident init + per-signature RoundData dedup (the
+    # platoon row carries its own shards) all running under shard_map
+    kw = dict(seeds=(0,), scenarios=tuple(sorted(SCENARIOS)), rounds=3,
               eval_every=3)
+    assert len(SCENARIOS) >= 8
     base = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
     rb = base.run_grid(**kw)
     sh = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
@@ -240,11 +408,19 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     assert sh.grid_shards() == 4, sh.grid_shards()
     rs = sh.run_grid(**kw)
     assert rs.runs == rb.runs
-    for f in rb.metrics._fields:
-        a, b = np.asarray(getattr(rs.metrics, f)), np.asarray(getattr(rb.metrics, f))
-        m = np.isfinite(b)
-        assert np.isfinite(a).sum() == m.sum(), f
-        np.testing.assert_allclose(a[m], b[m], rtol=2e-4, atol=1e-5, err_msg=f)
+    def _close(rs, rb):
+        for f in rb.metrics._fields:
+            a = np.asarray(getattr(rs.metrics, f))
+            b = np.asarray(getattr(rb.metrics, f))
+            m = np.isfinite(b)
+            assert np.isfinite(a).sum() == m.sum(), f
+            np.testing.assert_allclose(a[m], b[m], rtol=2e-4, atol=1e-5,
+                                       err_msg=f)
+    _close(rs, rb)
+    # G=6 rows on 4 shards: the pad-to-shard-count + slice-back path
+    kw2 = dict(seeds=(0, 1), scenarios=("ring", "rush_hour", "platoon"),
+               rounds=3, eval_every=3)
+    _close(sh.run_grid(**kw2), base.run_grid(**kw2))
     print("SHARDED_GRID_OK")
 """)
 

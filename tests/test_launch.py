@@ -93,6 +93,32 @@ def test_train_step_runs_and_state_axes_align():
     assert int(state2.opt_state.step) == 1
 
 
+def test_fl_sim_unknown_scenario_lists_catalog():
+    """Satellite: --scenario with an unknown name errors with the registered
+    catalog instead of a raw KeyError (both the CLI and the programmatic
+    ``run_experiment`` entry point)."""
+    from repro.core.scenarios import SCENARIOS
+    from repro.launch import fl_sim
+
+    with pytest.raises(ValueError) as ei:
+        fl_sim.run_experiment("mnist", "contextual", rounds=1, scenario="atlantis")
+    msg = str(ei.value)
+    assert "atlantis" in msg
+    for name in SCENARIOS:
+        assert name in msg, f"registered scenario {name} missing from the error"
+
+
+def test_fl_sim_cli_unknown_scenario_exits_with_catalog(capsys):
+    from repro.launch import fl_sim
+
+    with pytest.raises(SystemExit) as ei:
+        fl_sim.main(["--scenario", "atlantis"])
+    assert ei.value.code == 2  # argparse usage error, not a stack trace
+    err = capsys.readouterr().err
+    assert "atlantis" in err and "registered catalog" in err
+    assert "platoon" in err and "day_cycle" in err
+
+
 def test_production_mesh_axes():
     from repro.launch.mesh import make_production_mesh
     # only shape math here (needs 256 devices to actually build)

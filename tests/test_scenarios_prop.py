@@ -1,0 +1,180 @@
+"""Property tests for the scenario catalog (hypothesis, shim-backed).
+
+Three properties over ``ScenarioParams`` — the contract the batched engine
+relies on:
+
+  * stack/unstack round-trip: stacking scenarios along the grid axis and
+    slicing a lane back recovers every traced leaf bit for bit (and the
+    shared static metadata);
+  * traced-vs-static partition: every ``TrafficConfig`` field appears in
+    EXACTLY one of ``_TRACED_FIELDS`` / ``_STATIC_FIELDS`` (n_rsu is the
+    only derived static), and the pytree leaves are exactly the traced
+    fields — a field added to the config but forgotten in the partition
+    would silently freeze it across a grid;
+  * finiteness: one ``round_step`` under randomly drawn catalog parameters
+    stays finite for EVERY registered scenario — schedules, outages,
+    coupling gains and fleet mixtures may reshape the physics but never
+    produce NaN/inf round economics.
+
+Uses real ``hypothesis`` when installed, else the deterministic shim in
+``tests/_hypothesis_fallback.py`` (same API, seeded draws).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # pragma: no cover - prefer the real engine when available
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.config import FLConfig, ModelConfig, TrafficConfig
+from repro.core.scenarios import (
+    _STATIC_FIELDS,
+    _TRACED_FIELDS,
+    SCENARIOS,
+    ScenarioParams,
+    scenario_config,
+    scenario_params,
+    stack_scenarios,
+)
+
+N_CLIENTS = 8
+
+MLP = ModelConfig(name="mlp", family="mlp", num_layers=0, d_model=0, num_heads=0,
+                  num_kv_heads=0, d_ff=16, vocab_size=0, image_shape=(28, 28, 1),
+                  num_classes=10, channels=())
+
+FL = FLConfig(num_clients=N_CLIENTS, samples_per_client=32, local_epochs=1,
+              num_clusters=2, batch_size=16, sketch_dim=64)
+
+
+# ---------------------------------------------------------------------------
+# stack/unstack round-trip
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(names=st.lists(st.sampled_from(sorted(SCENARIOS)), min_size=1, max_size=6))
+def test_stack_unstack_round_trip(names):
+    params = [scenario_params(scenario_config(n, num_vehicles=N_CLIENTS))
+              for n in names]
+    stacked = stack_scenarios(params)
+    for i, p in enumerate(params):
+        lane = jax.tree_util.tree_map(lambda x: x[i], stacked)
+        for f in _TRACED_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(lane, f)), np.asarray(getattr(p, f)), err_msg=f
+            )
+        for f in _STATIC_FIELDS:
+            assert getattr(lane, f) == getattr(p, f), f
+
+
+# ---------------------------------------------------------------------------
+# traced-vs-static field partition
+# ---------------------------------------------------------------------------
+def test_field_partition_covers_traffic_config():
+    traced, static = set(_TRACED_FIELDS), set(_STATIC_FIELDS)
+    assert not traced & static, "a field cannot be both traced and static"
+    cfg_fields = {f.name for f in dataclasses.fields(TrafficConfig)}
+    # n_rsu is DERIVED from the traced geometry (the only non-config static)
+    assert (traced | static) - {"n_rsu"} == cfg_fields, (
+        "every TrafficConfig field must be classified traced-or-static; "
+        f"unclassified: {sorted(cfg_fields - traced - static)}, "
+        f"stale: {sorted((traced | static) - {'n_rsu'} - cfg_fields)}"
+    )
+    sp_fields = {f.name for f in dataclasses.fields(ScenarioParams)}
+    assert sp_fields == traced | static
+
+
+def test_pytree_leaves_are_exactly_the_traced_fields():
+    p = scenario_params(scenario_config("ring", num_vehicles=N_CLIENTS))
+    leaves = jax.tree_util.tree_leaves(p)
+    assert len(leaves) == len(_TRACED_FIELDS)
+    assert all(l.dtype == jnp.float32 for l in leaves)
+    # static metadata must be hashable (it keys the compiled program)
+    meta = tuple(getattr(p, f) for f in _STATIC_FIELDS)
+    hash(meta)
+
+
+# ---------------------------------------------------------------------------
+# finiteness of one round under randomly drawn catalog parameters
+# ---------------------------------------------------------------------------
+_ROUND_ENV: dict = {}
+
+
+def round_env():
+    """One compiled round_step + fixed init, reused across all draws (the
+    scenario is a traced argument, so no draw ever retraces).  A memoized
+    helper rather than a pytest fixture: the hypothesis fallback shim wraps
+    tests with an empty signature, which hides fixture requests."""
+    if "v" not in _ROUND_ENV:
+        from repro.fl.engine import ExperimentEngine
+        from repro.fl.rounds import (
+            experiment_key,
+            init_state_traced,
+            make_round_data,
+        )
+
+        eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+        eng._ensure_spec()
+        tc0 = scenario_config("ring", num_vehicles=N_CLIENTS)
+        key = experiment_key("mnist", "contextual", 0)
+        state, regions = init_state_traced(eng._init_params, FL, tc0, key)
+        data = make_round_data(key, "mnist", FL, regions)
+        step = jax.jit(lambda s, scn: eng._round_step(
+            s, scn, jnp.zeros((), jnp.int32), data, True
+        ))
+        _ROUND_ENV["v"] = (state, step)
+    return _ROUND_ENV["v"]
+
+
+@settings(max_examples=2, deadline=None)
+@given(
+    mean_speed=st.floats(3.0, 40.0),
+    speed_std=st.floats(0.0, 8.0),
+    accel_std=st.floats(0.05, 2.5),
+    ou_theta=st.floats(0.05, 1.0),
+    rush_amp=st.floats(0.0, 4.0),
+    outage=st.floats(0.0, 0.8),
+    coupling=st.floats(0.0, 1.0),
+    truck=st.floats(0.0, 0.5),
+    bus=st.floats(0.0, 0.4),
+    day_amp=st.floats(0.0, 4.0),
+)
+def test_round_step_finite_for_every_scenario(
+    mean_speed, speed_std, accel_std, ou_theta,
+    rush_amp, outage, coupling, truck, bus, day_amp,
+):
+    # every draw sweeps EVERY registered scenario: new catalog entries are
+    # property-tested the moment they are registered
+    state, step = round_env()
+    for scenario in sorted(SCENARIOS):
+        tc = scenario_config(scenario, num_vehicles=N_CLIENTS)
+        tc = dataclasses.replace(
+            tc,
+            mean_speed_mps=mean_speed,
+            speed_std_mps=speed_std,
+            accel_std=accel_std,
+            ou_theta=ou_theta,
+            rush_amp=rush_amp,
+            rsu_outage_frac=outage,
+            platoon_coupling=coupling,
+            fleet_truck_frac=truck,
+            fleet_bus_frac=bus,
+            day_amp=day_amp,
+        )
+        new_state, metrics = step(state, scenario_params(tc))
+        for name in ("duration", "sim_time", "test_acc", "test_loss"):
+            v = float(getattr(metrics, name))
+            assert np.isfinite(v), f"{scenario}: non-finite {name}={v}"
+        assert float(metrics.duration) > 0.0
+        for leaf in jax.tree_util.tree_leaves(new_state.params):
+            assert bool(jnp.all(jnp.isfinite(leaf))), f"{scenario}: non-finite params"
+        for name in ("pos", "speed", "accel", "compute_factor"):
+            leaf = getattr(new_state.twin, name)
+            assert bool(jnp.all(jnp.isfinite(leaf))), (
+                f"{scenario}: non-finite twin.{name}"
+            )
+        assert int(metrics.n_succeeded) <= int(metrics.n_selected)
