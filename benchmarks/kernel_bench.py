@@ -15,7 +15,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import ART  # noqa: F401  (sys.path side effect)
-from repro.kernels import fedavg_reduce, pairwise_cosine, ref, swa_decode
+from repro.kernels import (
+    fedavg_reduce,
+    pairwise_cosine,
+    pick_block_p,
+    ref,
+    rttg_latency,
+    swa_decode,
+)
 
 
 def timeit(fn, *args, reps=3):
@@ -41,11 +48,37 @@ def main():
 
     u = jax.random.normal(k, (16, 1_000_000), jnp.float32)
     w = jnp.ones((16,)) / 16
+    # same tile policy as the round step (kernels.ops.pick_block_p): the
+    # bench and the engine must exercise identical kernel geometry
+    bp = pick_block_p(*u.shape)
     us_ref = timeit(jax.jit(ref.fedavg_reduce), u, w)
-    us_pal = timeit(lambda a, b: fedavg_reduce(a, b, interpret=interp), u, w)
-    err = float(jnp.max(jnp.abs(fedavg_reduce(u, w, interpret=interp) - ref.fedavg_reduce(u, w))))
+    us_pal = timeit(lambda a, b: fedavg_reduce(a, b, block_p=bp, interpret=interp), u, w)
+    err = float(jnp.max(jnp.abs(
+        fedavg_reduce(u, w, block_p=bp, interpret=interp) - ref.fedavg_reduce(u, w)
+    )))
     print(f"fedavg_reduce_oracle,{us_ref:.1f},K=16 P=1e6")
-    print(f"fedavg_reduce_pallas,{us_pal:.1f},maxerr={err:.1e}")
+    print(f"fedavg_reduce_pallas,{us_pal:.1f},maxerr={err:.1e} block_p={bp}")
+
+    # fused round geometry chain: predict -> attach -> latency -> conn
+    from repro.core.scenarios import scenario_config, scenario_params
+
+    N = 1024
+    scn = scenario_params(scenario_config("rush_hour", num_vehicles=N))
+    ks3 = jax.random.split(jax.random.key(3), 4)
+    pos = jax.random.uniform(ks3[0], (N,), jnp.float32, 0.0, float(scn.ring_length_m))
+    spd = 14.0 + jax.random.normal(ks3[1], (N,))
+    acc = 0.3 * jax.random.normal(ks3[2], (N,))
+    forced = jax.random.bernoulli(ks3[3], 0.7, (N,))
+    t, mb = jnp.float32(60.0), jnp.float32(1e5)
+    args = (pos, spd, acc, t, mb, forced, scn)
+    ref_jit = jax.jit(lambda *a: ref.rttg_latency(*a, True))
+    us_ref = timeit(ref_jit, *args)
+    us_pal = timeit(lambda *a: rttg_latency(*a, predict=True, interpret=interp), *args)
+    lat_k, _ = rttg_latency(*args, predict=True, interpret=interp)
+    lat_r, _ = ref_jit(*args)  # jitted: the bitwise contract is jit-vs-jit
+    err = float(jnp.max(jnp.abs(lat_k - lat_r)))
+    print(f"rttg_latency_oracle,{us_ref:.1f},N=1024 R={scn.n_rsu} predict=50steps")
+    print(f"rttg_latency_pallas,{us_pal:.1f},maxerr={err:.1e}")
 
     B, Hkv, G, D, C = 4, 8, 4, 128, 4096
     ks = jax.random.split(k, 3)

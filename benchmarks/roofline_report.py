@@ -1,14 +1,47 @@
 """§Roofline report: three-term roofline per (arch x shape) from the
-dry-run artifacts (see src/repro/launch/dryrun.py and EXPERIMENTS.md)."""
+dry-run artifacts (see src/repro/launch/dryrun.py and EXPERIMENTS.md),
+plus the FL round-step arithmetic-intensity account when
+``python -m repro.launch.hlo_analysis --target round-step`` has produced
+``artifacts/roundstep.json`` (fused vs unfused geometry chain — the
+fusion win shows up as the AI delta)."""
 from __future__ import annotations
 
+import json
 import os
 
 from benchmarks.common import ART
 from repro.roofline import analyze_record, load_artifacts, render_table
 
 
+def report_round_step(path: str | None = None) -> dict | None:
+    """CSV rows for the round-step HLO account, if the artifact exists."""
+    path = path or os.path.join(ART, "roundstep.json")
+    if not os.path.exists(path):
+        print("roundstep,NO_ARTIFACT,run python -m repro.launch.hlo_analysis"
+              " --target round-step first")
+        return None
+    with open(path) as f:
+        doc = json.load(f)
+    for name in ("fused", "unfused"):
+        r = doc.get(name)
+        if not r:
+            continue
+        print(
+            f"roundstep,{name},grid={r['grid']}x{r['rounds']}r,"
+            f"flops_per_round={r['dot_flops_per_round']:.3e},"
+            f"hbm_per_round={r['hbm_bytes_per_round']:.3e},"
+            f"ai={r['arithmetic_intensity']:.3f}"
+        )
+    if doc.get("fused") and doc.get("unfused"):
+        delta = doc["fused"]["arithmetic_intensity"] / max(
+            doc["unfused"]["arithmetic_intensity"], 1e-12
+        )
+        print(f"roundstep,ai_delta={delta:.3f}x")
+    return doc
+
+
 def main(mesh: str = "pod16x16"):
+    report_round_step()
     recs = load_artifacts(os.path.join(ART, "dryrun"), mesh)
     if not recs:
         print(f"roofline,NO_ARTIFACTS,run python -m repro.launch.dryrun first")

@@ -17,6 +17,33 @@ import jax.numpy as jnp
 from repro.utils import fold_in_str
 
 
+def sketch_sign_vector(key: jax.Array, dim: int, sketch_dim: int) -> jax.Array:
+    """Seeded Rademacher sign vector for ``dim``-long updates (padded).
+
+    Hoistable: the signs depend only on (key, P, sketch_dim) — per
+    EXPERIMENT constants — so the round core draws them ONCE at init
+    (``RoundState.sketch_sign``) instead of re-drawing a P-long Bernoulli
+    every report inside the rounds scan, where XLA cannot hoist it out of
+    the loop.  The fold chain here is THE chain ``update_sketch`` uses:
+    changing it desynchronizes carried signs from the legacy one-call API.
+    """
+    pad = (-dim) % sketch_dim
+    sign_bits = jax.random.bernoulli(
+        fold_in_str(key, "sketch-sign"), 0.5, (dim + pad,)
+    )
+    return jnp.where(sign_bits, 1.0, -1.0)
+
+
+def apply_sketch(update_vec: jax.Array, sign: jax.Array, sketch_dim: int) -> jax.Array:
+    """Fold a flat update against a precomputed sign vector; unit-normalized."""
+    D = update_vec.shape[0]
+    pad = (-D) % sketch_dim
+    x = jnp.pad(update_vec.astype(jnp.float32), (0, pad)) * sign
+    acc = jnp.sum(x.reshape(-1, sketch_dim), axis=0)
+    norm = jnp.linalg.norm(acc)
+    return acc / jnp.maximum(norm, 1e-12)
+
+
 @functools.partial(jax.jit, static_argnames=("sketch_dim",))
 def update_sketch(update_vec: jax.Array, key: jax.Array, sketch_dim: int) -> jax.Array:
     """Count-sketch of a flat update vector; unit-normalized.
@@ -25,18 +52,12 @@ def update_sketch(update_vec: jax.Array, key: jax.Array, sketch_dim: int) -> jax
     seeded Rademacher sign vector — an unbiased JL-style projection whose
     cost is one O(P) sweep (a dense Gaussian projection would generate
     P x sketch_dim normals per report and dominates the FL loop on CPU).
-    Every client uses the SAME key so sketches are comparable.
+    Every client uses the SAME key so sketches are comparable.  One-call
+    convenience over ``sketch_sign_vector`` + ``apply_sketch``; hot loops
+    carry the sign vector and call ``apply_sketch`` directly.
     """
-    D = update_vec.shape[0]
-    pad = (-D) % sketch_dim
-    sign_bits = jax.random.bernoulli(
-        fold_in_str(key, "sketch-sign"), 0.5, (D + pad,)
-    )
-    sign = jnp.where(sign_bits, 1.0, -1.0)
-    x = jnp.pad(update_vec.astype(jnp.float32), (0, pad)) * sign
-    acc = jnp.sum(x.reshape(-1, sketch_dim), axis=0)
-    norm = jnp.linalg.norm(acc)
-    return acc / jnp.maximum(norm, 1e-12)
+    sign = sketch_sign_vector(key, update_vec.shape[0], sketch_dim)
+    return apply_sketch(update_vec, sign, sketch_dim)
 
 
 def pairwise_cosine(sketches: jax.Array) -> jax.Array:

@@ -16,7 +16,18 @@ from repro.config import TrafficConfig
 from repro.core.rttg import RTTG, build_rttg
 
 
-def fuse_messages(cams: dict, cpms: dict, t, cfg: TrafficConfig) -> RTTG:
+def fuse_kinematics(cams: dict, cpms: dict, cfg: TrafficConfig):
+    """Inverse-variance fusion to plain kinematic arrays (no RTTG build).
+
+    The fusable pure form of stage 1: returns ``(pos, speed, accel,
+    pos_var)`` per vehicle.  The fused round path feeds these straight
+    into the ``rttg_latency`` chain — skipping the intermediate RTTG whose
+    RSU geometry and (N, N) adjacency the selector never reads — while
+    ``fuse_messages`` wraps it for the legacy composition path.  The
+    scatter-adds stay outside the Pallas kernel: their float accumulation
+    order is backend-defined, so hoisting them keeps the kernel's bitwise
+    contract clean.
+    """
     N = cams["pos"].shape[0]
     L = cfg.ring_length_m
 
@@ -46,4 +57,9 @@ def fuse_messages(cams: dict, cpms: dict, t, cfg: TrafficConfig) -> RTTG:
     speed = sum_speed / sum_w
     accel = sum_accel / sum_w
     pos_var = 1.0 / sum_w
+    return pos, speed, accel, pos_var
+
+
+def fuse_messages(cams: dict, cpms: dict, t, cfg: TrafficConfig) -> RTTG:
+    pos, speed, accel, pos_var = fuse_kinematics(cams, cpms, cfg)
     return build_rttg(t, pos, speed, accel, pos_var, cfg)

@@ -10,6 +10,16 @@ Maps an RTTG snapshot to per-client FL communication latency:
 
 Connectivity: SNR above threshold AND (optionally) a forced connection-rate
 mask reproducing Tab. I's CR in {1.0, 0.5, 0.2}.
+
+The module is split into *fusable pure forms* — ``snr_from_dist``,
+``latency_from_geometry``, ``connected_from_snr`` — that consume plain
+per-client geometry arrays, and the legacy RTTG-facing wrappers
+(``snr_db`` / ``latency_model`` / ``connectivity``) that delegate to them.
+The pure forms are the single source of the radio math: the fused
+``rttg_latency`` Pallas kernel (``repro.kernels``) mirrors them tile by
+tile and its pure-jnp reference (``repro.kernels.ref``) calls them
+directly, which is what makes the fused and unfused round paths bitwise
+comparable.
 """
 from __future__ import annotations
 
@@ -22,10 +32,62 @@ from repro.core.rttg import RTTG, congestion_factor
 _C = 299_792_458.0
 
 
-def snr_db(rttg: RTTG, cfg: TrafficConfig) -> jax.Array:
-    d = jnp.maximum(rttg.rsu_dist, 1.0)
+# ---------------------------------------------------------------------------
+# fusable pure forms (plain geometry arrays in, plain arrays out)
+# ---------------------------------------------------------------------------
+
+def snr_from_dist(rsu_dist: jax.Array, cfg) -> jax.Array:
+    """SNR (dB) per client from the 3D distance to the attached RSU."""
+    d = jnp.maximum(rsu_dist, 1.0)
     pl = 32.4 + 20.0 * jnp.log10(cfg.carrier_ghz) + 30.0 * jnp.log10(d)
     return cfg.eirp_dbm - pl - cfg.noise_dbm
+
+
+def connected_from_snr(
+    snr: jax.Array, cfg, forced: jax.Array | None = None
+) -> jax.Array:
+    """Bool connected mask from SNR (dB) + optional forced-CR Bernoulli."""
+    ok = snr >= cfg.snr_min_db
+    if forced is not None:
+        ok = ok & forced
+    return ok
+
+
+def latency_from_geometry(
+    t, speed: jax.Array, rsu_dist: jax.Array, rsu_load: jax.Array,
+    model_bytes, cfg,
+) -> jax.Array:
+    """Round-trip FL latency (s) from per-client attachment geometry.
+
+    ``t`` feeds the congestion schedule; ``rsu_load`` is the raw
+    vehicles-per-RSU count (the density multiplier is applied here).
+    The model is smooth so the predictor can rank clients even near the
+    SNR threshold; disconnection is ``connected_from_snr``'s job.
+    """
+    snr = snr_from_dist(rsu_dist, cfg)
+    snr_lin = jnp.power(10.0, snr / 10.0)
+    # rush-hour density multiplies effective contention on the shared RSU
+    # (background CAM/CPM traffic scales with density, not just FL uploads)
+    load = rsu_load * congestion_factor(t, cfg)
+    # per-RSU bandwidth shared by attached vehicles (uplink ~= downlink here)
+    rate = cfg.bandwidth_hz / jnp.maximum(load, 1.0) * jnp.log2(1.0 + snr_lin)
+    rate = jnp.maximum(rate, 1e4)  # 10 kb/s floor avoids infs off-coverage
+    payload_bits = 8.0 * (jnp.asarray(model_bytes, jnp.float32) + cfg.overhead_bytes)
+    t_air = 2.0 * payload_bits / rate  # up + down
+    t_prop = 2.0 * rsu_dist / _C + 2.0 * cfg.backhaul_s
+    t_queue = cfg.queue_s_per_vehicle * load
+    # cell-edge handover penalty grows with speed near the RSU boundary
+    edge = rsu_dist / (0.5 * cfg.rsu_spacing_m)  # ~1 at the cell edge
+    t_handover = 0.2 * jnp.clip(edge - 0.7, 0.0, 1.0) * speed / cfg.mean_speed_mps
+    return t_air + t_prop + t_queue + t_handover
+
+
+# ---------------------------------------------------------------------------
+# RTTG-facing wrappers (the legacy composition path)
+# ---------------------------------------------------------------------------
+
+def snr_db(rttg: RTTG, cfg: TrafficConfig) -> jax.Array:
+    return snr_from_dist(rttg.rsu_dist, cfg)
 
 
 def connectivity(
@@ -35,34 +97,15 @@ def connectivity(
     key: jax.Array | None = None,
 ) -> jax.Array:
     """Bool (N,) connected mask."""
-    ok = snr_db(rttg, cfg) >= cfg.snr_min_db
+    forced = None
     if connection_rate < 1.0:
         assert key is not None, "forced CR needs a PRNG key"
-        forced = jax.random.bernoulli(key, connection_rate, ok.shape)
-        ok = ok & forced
-    return ok
+        forced = jax.random.bernoulli(key, connection_rate, rttg.rsu_dist.shape)
+    return connected_from_snr(snr_db(rttg, cfg), cfg, forced)
 
 
 def latency_model(rttg: RTTG, model_bytes, cfg: TrafficConfig) -> jax.Array:
-    """Round-trip FL communication latency per client, seconds (N,).
-
-    Disconnection is not encoded here (callers combine with
-    ``connectivity``); the model is smooth so the predictor can rank
-    clients even near the SNR threshold.
-    """
-    snr = snr_db(rttg, cfg)
-    snr_lin = jnp.power(10.0, snr / 10.0)
-    # rush-hour density multiplies effective contention on the shared RSU
-    # (background CAM/CPM traffic scales with density, not just FL uploads)
-    load = rttg.load * congestion_factor(rttg.t, cfg)
-    # per-RSU bandwidth shared by attached vehicles (uplink ~= downlink here)
-    rate = cfg.bandwidth_hz / jnp.maximum(load, 1.0) * jnp.log2(1.0 + snr_lin)
-    rate = jnp.maximum(rate, 1e4)  # 10 kb/s floor avoids infs off-coverage
-    payload_bits = 8.0 * (jnp.asarray(model_bytes, jnp.float32) + cfg.overhead_bytes)
-    t_air = 2.0 * payload_bits / rate  # up + down
-    t_prop = 2.0 * rttg.rsu_dist / _C + 2.0 * cfg.backhaul_s
-    t_queue = cfg.queue_s_per_vehicle * load
-    # cell-edge handover penalty grows with speed near the RSU boundary
-    edge = rttg.rsu_dist / (0.5 * cfg.rsu_spacing_m)  # ~1 at the cell edge
-    t_handover = 0.2 * jnp.clip(edge - 0.7, 0.0, 1.0) * rttg.speed / cfg.mean_speed_mps
-    return t_air + t_prop + t_queue + t_handover
+    """Round-trip FL communication latency per client, seconds (N,)."""
+    return latency_from_geometry(
+        rttg.t, rttg.speed, rttg.rsu_dist, rttg.load, model_bytes, cfg
+    )

@@ -29,9 +29,24 @@ class RTTG(NamedTuple):
     adj: jax.Array  # (N,N) bool V2V adjacency
 
 
-def _ring_dist(a, b, length):
+def ring_dist(a, b, length):
+    """Shortest arc distance on a ring of circumference ``length``.
+
+    Exposed as a fusable pure form: the ``rttg_latency`` kernel
+    (``repro.kernels``) re-implements exactly this expression per tile and
+    its reference composes it, so keep the op order stable (abs, then
+    min against the complement).
+    """
     d = jnp.abs(a - b)
     return jnp.minimum(d, length - d)
+
+
+_ring_dist = ring_dist  # internal alias (historical name)
+
+
+def rsu_positions(cfg) -> jax.Array:
+    """(n_rsu,) arc positions of the RSUs — the single spacing rule."""
+    return jnp.arange(n_rsu_of(cfg)) * cfg.rsu_spacing_m
 
 
 def day_envelope(t, cfg) -> jax.Array:
@@ -109,9 +124,13 @@ def rsu_geometry(pos: jax.Array, cfg: TrafficConfig):
     ``cfg`` may be a concrete ``TrafficConfig`` or a traced
     ``core.scenarios.ScenarioParams``; the RSU *count* is always static
     (it sets array shapes) while the spacing may be traced.
+
+    This is the fusable pure form of the attachment stage: the
+    ``rttg_latency`` kernel mirrors it tile by tile (computing ``load``
+    as per-RSU counts gathered back per client — integer-exact, so the
+    two layouts agree bitwise) and its reference calls it directly.
     """
-    n_rsu = n_rsu_of(cfg)
-    rsu_pos = jnp.arange(n_rsu) * cfg.rsu_spacing_m
+    rsu_pos = rsu_positions(cfg)
     d_along = _ring_dist(pos[:, None], rsu_pos[None, :], cfg.ring_length_m)
     # dark RSUs (rsu_outage scenarios) never win the attachment argmin:
     # vehicles in an outage corridor attach to the nearest LIVE RSU, paying

@@ -32,10 +32,21 @@ from repro.config import TrafficConfig
 from repro.core.rttg import RTTG, build_rttg
 
 
-def predict_rttg(rttg: RTTG, horizon_s: float, cfg: TrafficConfig) -> RTTG:
-    """Propagate the fused RTTG ``horizon_s`` seconds forward (lax.scan)."""
+def horizon_steps(horizon_s: float, cfg) -> int:
+    """Static Euler trip count of a prediction horizon (the single rule)."""
+    return max(int(round(horizon_s / cfg.sim_dt_s)), 1)
+
+
+def predict_kinematics(pos, speed, accel, n: int, cfg):
+    """``n`` Euler steps of the deterministic OU-mean predictor.
+
+    The fusable pure form of stage 2: plain (N,) kinematic arrays in and
+    out, no RTTG construction.  The ``rttg_latency`` kernel runs exactly
+    this loop per N-block (same ops, same order, static trip count) before
+    its attachment/latency stages; ``predict_rttg`` wraps it for the
+    legacy composition path.
+    """
     dt = cfg.sim_dt_s
-    n = max(int(round(horizon_s / dt)), 1)
 
     def body(carry, _):
         pos, speed, accel = carry
@@ -45,7 +56,15 @@ def predict_rttg(rttg: RTTG, horizon_s: float, cfg: TrafficConfig) -> RTTG:
         return (pos, speed, accel), None
 
     (pos, speed, accel), _ = jax.lax.scan(
-        body, (rttg.pos, rttg.speed, rttg.accel), None, length=n
+        body, (pos, speed, accel), None, length=n
+    )
+    return pos, speed, accel
+
+
+def predict_rttg(rttg: RTTG, horizon_s: float, cfg: TrafficConfig) -> RTTG:
+    """Propagate the fused RTTG ``horizon_s`` seconds forward (lax.scan)."""
+    pos, speed, accel = predict_kinematics(
+        rttg.pos, rttg.speed, rttg.accel, horizon_steps(horizon_s, cfg), cfg
     )
     # prediction inflates position variance (process noise accumulates)
     var = rttg.pos_var + cfg.accel_std**2 * horizon_s**3 / 3.0

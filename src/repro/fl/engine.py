@@ -4,19 +4,30 @@ The legacy loop runs ONE experiment at a time with a host round-trip every
 round.  This engine runs a whole grid as a single XLA program:
 
   * each experiment is a ``lax.scan`` of the pure ``round_step`` over
-    rounds (zero per-round host syncs; eval is a strided ``lax.cond``);
-  * the grid axis is a ``vmap`` over (RoundState, RoundData, ScenarioParams,
-    strategy index), so strategies, seeds and scenarios batch together;
+    rounds (zero per-round host syncs; eval is a strided ``lax.cond``, and
+    the re-clustering cadence rides the same xs stream so BOTH conds keep
+    unbatched predicates — a genuine branch under vmap, not a both-sides
+    select);
+  * the grid axis is a ``vmap`` over (RoundState, ScenarioParams, strategy
+    index, data row index), so strategies, seeds and scenarios batch
+    together;
+  * the scan carry (argument 0: stacked states / experiment keys) is
+    DONATED to the compiled program (``donate_argnums``) and the carried
+    model is the flat (P,) vector layout (``rounds.RoundState``), so
+    steady-state sweeps update the grid's parameter matrix in place
+    instead of re-laying it out every call;
   * given a device ``mesh``, the grid axis is SHARDED over it with
     ``shard_map`` (resolved through the ``"grid"`` rule in
     ``sharding.rules.TRAIN_RULES``, rows padded to the shard count and
     sliced back) — states, scenarios and the scan compute split across
     devices, so multi-device hosts and pods sweep hundreds of scenarios;
     falls back to the plain vmapped program whenever the mesh has a
-    single device.  RoundData rows REPLICATE per device (each device
-    materializes every unique (strategy, seed) row — scenario-heavy grids
-    shard perfectly, seed-heavy grids are still bounded by the unique-pair
-    data footprint per device);
+    single device.  RoundData rows are SHARD-LOCAL: the host plans which
+    dedup rows each shard's lanes gather (``partition.shard_local_rows``),
+    ships each device only its own (M,) row seeds through the
+    ``"data_rows"`` sharding rule, and remaps ``data_idx`` to shard-local
+    positions — a seed-heavy grid's client-data footprint scales
+    ~1/n_shards instead of replicating every row everywhere;
   * experiment INIT is device-resident too (``init_on_device=True``, the
     default): ``run_grid`` setup reduces to pure key stacking — the host
     folds one experiment key per row and the compiled program runs
@@ -28,6 +39,11 @@ round.  This engine runs a whole grid as a single XLA program:
     (``partition_on_device=True``, the default): ``rounds.make_round_data``
     materializes the (C, n, H, W, ch) shards per unique data row under
     jit, so grid size is bounded by device memory, not host RAM;
+  * the stacked rows are NEVER copied per lane: ``round_step`` gathers
+    ``leaf[data_idx, ...]`` lazily at each use site (one fused gather for
+    the K-client cohort, a test-set gather only on eval rounds), so the
+    per-lane client-shard copies the old per-lane ``tree_map`` gather
+    materialized are gone;
   * per-round test evaluation is hoisted to every ``eval_every`` rounds
     (the final round always evaluates).
 
@@ -72,6 +88,7 @@ from repro.core.scenarios import (
     scenario_params,
     stack_scenarios,
 )
+from repro.fl.partition import shard_local_rows
 from repro.fl.rounds import (
     RoundData,
     RoundMetrics,
@@ -98,6 +115,13 @@ ScenarioLike = Union[str, TrafficConfig]
 def _eval_flags(rounds: int, eval_every: int) -> jnp.ndarray:
     flags = [(r + 1) % max(eval_every, 1) == 0 or r == rounds - 1 for r in range(rounds)]
     return jnp.asarray(flags)
+
+
+def _recluster_flags(rounds: int, recluster_every: int) -> jnp.ndarray:
+    """Per-round re-cluster schedule, precomputed so the scan body's cond
+    predicate stays UNBATCHED under vmap (see module docstring)."""
+    every = max(recluster_every, 1)
+    return jnp.asarray([(r + 1) % every == 0 for r in range(rounds)])
 
 
 @dataclasses.dataclass
@@ -128,6 +152,11 @@ class ExperimentEngine:
     axis over them (``launch.mesh.make_grid_mesh()`` builds the all-device
     1-D mesh).  ``partition_on_device``: build client shards inside the
     compiled program (default) instead of stacking host copies.
+
+    ``last_data_plan`` (after a sharded ``run_grid``): the shard-local
+    RoundData placement — ``{"total_rows", "rows_per_shard", "n_shards"}``
+    — exposed for tests and capacity planning; ``None`` on the vmapped
+    path (one device holds every dedup row by definition).
     """
 
     def __init__(
@@ -154,7 +183,13 @@ class ExperimentEngine:
         # twin-init by-product); host data stacking implies host init
         self.init_on_device = bool(init_on_device and partition_on_device)
         self._round_step = None
-        self._grid_fn = jax.jit(self._grid, static_argnames=("warm",))
+        self.last_data_plan = None
+        # donate the stacked states / experiment keys: the scan carry is
+        # consumed by the program, so XLA updates the grid's flat parameter
+        # matrix in place instead of re-laying it out every sweep
+        self._grid_fn = jax.jit(
+            self._grid, static_argnames=("warm",), donate_argnums=(0,)
+        )
         self._sharded_fn = None  # built lazily once the padded spec is known
 
     # -- lazy build: model bytes / flat spec need a concrete param tree ----
@@ -170,7 +205,7 @@ class ExperimentEngine:
                 self.api.loss, self.fl, self.cohort_size, self.model_bytes,
                 self.param_spec, strategies=self.strategies,
             )
-            self._warmup = make_warmup(self.api.loss, self.fl)
+            self._warmup = make_warmup(self.api.loss, self.fl, self.param_spec)
         return self._round_step
 
     def _ensure_spec(self):
@@ -212,10 +247,10 @@ class ExperimentEngine:
         runs ``init_state_traced`` itself.
         """
         tc = self._traffic_of(scenario)
+        self._ensure_spec()  # flat layout comes from the abstract trace
         state, regions = init_state(
             self.api, self.fl, tc, self.dataset, strategy, jax.random.key(seed)
         )
-        self._ensure_step(state.params)
         if self.partition_on_device:
             data = (state.key, regions)
         else:
@@ -235,9 +270,11 @@ class ExperimentEngine:
             n *= sizes.get(a, 1)
         return n
 
-    def _build_sharded(self, row: PartitionSpec):
+    def _build_sharded(self, row: PartitionSpec, data_spec: PartitionSpec):
         """One shard_map program: each device runs the vmapped scan on its
-        slice of grid rows; RoundData seeds/rows and eval flags replicate."""
+        slice of grid rows against ONLY its own shard-local RoundData rows
+        (``data_spec`` splits the (n_shards * M) row axis); the tiny eval /
+        recluster flag streams replicate."""
         rep = PartitionSpec()
 
         def fn(states, datas, scns, strat_idx, data_idx, flags):
@@ -247,18 +284,20 @@ class ExperimentEngine:
             return shard_map(
                 local,
                 mesh=self.mesh,
-                in_specs=(row, rep, row, row, row, rep),
+                in_specs=(row, data_spec, row, row, row, rep),
                 out_specs=(row, row),
                 **SHARD_MAP_NO_CHECK,
             )(states, datas, scns, strat_idx, data_idx, flags)
 
-        return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=(0,))
 
     # -- the single compiled program --------------------------------------
     def _materialize(self, datas) -> RoundData:
         """Expand on-device data seeds into stacked RoundData rows (no-op on
         the host path).  Runs inside jit: one traced partition per unique
-        data row — never a host-materialized copy.
+        data row — never a host-materialized copy.  Under the sharded
+        engine the seeds arriving here are already the device's SHARD-LOCAL
+        slice, so each device expands only the rows its lanes gather.
 
         Two seed forms: ``(keys, regions)`` (host init computed the regions
         eagerly) and ``(keys, ScenarioParams)`` (device-resident init: the
@@ -303,18 +342,23 @@ class ExperimentEngine:
         # experiment key folds strategy/seed/dataset, never the scenario;
         # platoon spawn regroups regions, so its rows carry their own
         # ``data_signature``), so it holds one row per unique signature and
-        # each lane gathers its row by ``data_idx`` — not one per grid cell.
+        # each lane gathers from its row by ``data_idx`` — not one per grid
+        # cell, and never as a per-lane materialized copy (round_step
+        # indexes the stacked rows lazily at each use site).
         states = self._init_states(states, scns)
         datas = self._materialize(datas)
         step = self._round_step
 
         def one(state, scn, si, di):
-            data = jax.tree_util.tree_map(lambda x: x[di], datas)
             if warm:
-                state = self._warmup(state, data)
+                state = self._warmup(state, datas, di)
 
-            def body(s, flag):
-                return step(s, scn, si, data, flag)
+            def body(s, xs):
+                do_eval, do_recluster = xs
+                # tag the scan body so hlo_analysis can trip-weight the
+                # per-round ops (the ``round-step`` target)
+                with jax.named_scope("round"):
+                    return step(s, scn, si, datas, do_eval, do_recluster, di)
 
             final, metrics = jax.lax.scan(body, state, flags)
             return final, metrics
@@ -366,20 +410,27 @@ class ExperimentEngine:
         stack = lambda *xs: jnp.stack(xs)
         if self.init_on_device:
             states = jnp.stack(states)
-            datas = (
-                jnp.stack([k for k, _ in data_rows]),
-                stack_scenarios([s for _, s in data_rows]),
-            )
         else:
             states = jax.tree_util.tree_map(stack, *states)
-            datas = jax.tree_util.tree_map(stack, *data_rows)
         scns = stack_scenarios(scn_list)
         strat_idx = jnp.asarray(sidx, jnp.int32)
-        data_idx = jnp.asarray(didx, jnp.int32)
-        flags = _eval_flags(rounds, eval_every)
+        data_idx = np.asarray(didx, np.int32)
+        flags = (_eval_flags(rounds, eval_every),
+                 _recluster_flags(rounds, self.fl.recluster_every))
+
+        def stack_rows(rows, order=None):
+            """Stack dedup data rows (optionally gathered in ``order``)."""
+            rows = [rows[i] for i in order] if order is not None else rows
+            if self.init_on_device:
+                return (
+                    jnp.stack([k for k, _ in rows]),
+                    stack_scenarios([s for _, s in rows]),
+                )
+            return jax.tree_util.tree_map(stack, *rows)
 
         G = len(runs)
         nsh = self.grid_shards()
+        self.last_data_plan = None
         if nsh > 1:
             # pad grid rows to the shard count (repeating the last row),
             # shard the leading axis, slice the metrics back afterwards
@@ -392,19 +443,39 @@ class ExperimentEngine:
                 strat_idx, data_idx = strat_idx[pad_idx], data_idx[pad_idx]
             spec = resolve_pspec(("grid",), (G + pad,), self.mesh, TRAIN_RULES)
             if len(spec) and spec[0] is not None:
+                # shard-local RoundData: ship each device only the dedup
+                # rows its lanes gather, remap data_idx to local positions
+                shard_rows, local_idx = shard_local_rows(data_idx, nsh)
+                M = shard_rows.shape[1]
+                datas = stack_rows(data_rows, order=shard_rows.reshape(-1))
+                self.last_data_plan = {
+                    "total_rows": len(data_rows),
+                    "rows_per_shard": M,
+                    "n_shards": nsh,
+                }
+                dspec = resolve_pspec(
+                    ("data_rows",), (nsh * M,), self.mesh, TRAIN_RULES
+                )
                 if self._sharded_fn is None:
-                    self._sharded_fn = self._build_sharded(PartitionSpec(spec[0]))
+                    self._sharded_fn = self._build_sharded(
+                        PartitionSpec(spec[0]), PartitionSpec(dspec[0])
+                    )
                 _, metrics = self._sharded_fn(
-                    states, datas, scns, strat_idx, data_idx, flags
+                    states, datas, scns, strat_idx,
+                    jnp.asarray(local_idx), flags,
                 )
                 metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
             else:  # divisibility fallback (should not happen after padding)
                 _, metrics = self._grid_fn(
-                    states, datas, scns, strat_idx, data_idx, flags
+                    states, stack_rows(data_rows), scns, strat_idx,
+                    jnp.asarray(data_idx), flags,
                 )
                 metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
         else:
-            _, metrics = self._grid_fn(states, datas, scns, strat_idx, data_idx, flags)
+            _, metrics = self._grid_fn(
+                states, stack_rows(data_rows), scns, strat_idx,
+                jnp.asarray(data_idx), flags,
+            )
         scenarios = list(scenarios)
 
         def _label(sc):

@@ -120,6 +120,49 @@ def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
     return client_images(key, dataset, labels), labels
 
 
+def shard_local_rows(data_idx, n_shards: int):
+    """Plan shard-local RoundData placement for a sharded grid.
+
+    ``data_idx``: (G,) global dedup-row index per grid lane, G divisible by
+    ``n_shards`` (the engine pads first); lanes are split contiguously over
+    shards (``shard_map`` on the leading grid axis).  Returns
+
+      * ``shard_rows`` — (n_shards, M) int32: which GLOBAL rows each shard
+        materializes, M = max over shards of locally-referenced unique rows
+        (shards needing fewer repeat their first row — harmless duplicate
+        work bounded by the worst shard);
+      * ``local_idx``  — (G,) int32: each lane's row as an index into ITS
+        shard's M-row slice.
+
+    Host-side and static: ``data_idx`` is host-known at grid-build time, so
+    the per-shard row sets (and therefore all shapes) are static.  With
+    this plan each device expands only the seeds its own lanes gather —
+    seed-heavy grids' client-data footprint scales ~1/n_shards instead of
+    replicating every dedup row on every device.  Pure-numpy sibling of the
+    traced partitioners above.
+    """
+    import numpy as np
+
+    didx = np.asarray(data_idx, np.int32)
+    G = didx.shape[0]
+    assert G % n_shards == 0, (G, n_shards)
+    per = G // n_shards
+    locals_: list = []
+    for s in range(n_shards):
+        rows = list(dict.fromkeys(didx[s * per:(s + 1) * per].tolist()))
+        locals_.append(rows)
+    M = max(len(r) for r in locals_)
+    shard_rows = np.stack([
+        np.asarray(r + [r[0]] * (M - len(r)), np.int32) for r in locals_
+    ])
+    local_idx = np.empty((G,), np.int32)
+    for s, rows in enumerate(locals_):
+        pos = {g: i for i, g in enumerate(rows)}
+        for lane in range(s * per, (s + 1) * per):
+            local_idx[lane] = pos[didx[lane]]
+    return shard_rows, local_idx
+
+
 def make_test_set(key, dataset: str, n_test: int = 2_000):
     """Global iid test set with the same shared prototypes."""
     spec = dataset_spec(dataset)

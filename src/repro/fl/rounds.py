@@ -8,7 +8,7 @@ four pipeline stages (fusion -> prediction -> clustering -> election), the
 cohort training, the realized-latency round economics and the FedAvg update
 are folded into a single pure function
 
-    round_step(state, scn, strategy_idx, data, do_eval) -> (state, metrics)
+    round_step(state, scn, strategy_idx, data, do_eval, ...) -> (state, metrics)
 
 with *fixed-size, mask-based* selection (no data-dependent shapes) and
 ``jnp.where``/``lax.cond`` branching, so a whole experiment is one
@@ -16,9 +16,23 @@ with *fixed-size, mask-based* selection (no data-dependent shapes) and
 (see ``repro.fl.engine``).  Strategies are traced via ``lax.switch`` over
 ``STRATEGY_ORDER`` so the strategy axis vmaps like any other.
 
+One-sweep geometry (default ``fused=True``): both per-round geometry
+passes — the stage-2 *predicted* chain (fusion -> horizon prediction ->
+RSU attach -> latency -> connectivity) and the mid-round *realized* chain
+— run through the fused ``rttg_latency`` kernel path
+(``kernels.ops.rttg_latency_auto``), one tiled (N-block x R) sweep per
+pass instead of five-plus separate jnp sweeps plus an (N, N) adjacency the
+selector never reads.  ``fused=False`` keeps the legacy composition of the
+same core pure forms; the two paths are BITWISE identical (the guard in
+tests/test_round_fused.py runs them against each other with the kernel in
+interpret mode).
+
 Aggregation runs on the *flat* update layout through the Pallas
 ``fedavg_reduce`` kernel (one HBM sweep of the (K, P) update matrix),
-rather than K pytree AXPYs.
+rather than K pytree AXPYs — and the carried global model IS that flat
+(P,) fp32 vector: the scan carry is a single buffer the jit donates
+(``fl.engine``), the FedAvg delta lands as one AXPY, and the pytree view
+is materialized only where a consumer needs it (trainer, eval).
 
 Shape conventions (docs/architecture.md has the full walkthrough):
 
@@ -26,6 +40,10 @@ Shape conventions (docs/architecture.md has the full walkthrough):
     bool MASK compacted into K slots, never a data-dependent gather);
   * client updates travel as the FLAT (K, P) layout (``flat_spec_of``
     round-trips the pytree) until the single FedAvg reduction;
+  * ``RoundData`` rows may carry a leading dedup-row axis: passing
+    ``data_idx`` makes every access gather ``leaf[data_idx, ...]`` lazily
+    (one fused gather at the use site), so the batched engine shares one
+    stacked row set across lanes without materializing per-lane copies;
   * every ``RoundState``/``RoundData``/``RoundMetrics`` leaf gains a
     LEADING grid axis (G, ...) under the batched engine — per-experiment
     code never indexes it, ``vmap``/``shard_map`` insert it.
@@ -40,20 +58,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import FLConfig, TrafficConfig
-from repro.core.fusion import fuse_messages
+from repro.core.fusion import fuse_kinematics, fuse_messages
 from repro.core.messages import emit_cams, emit_cpms
 from repro.core.network import connectivity, latency_model
 from repro.core.rttg import build_rttg
 from repro.core.selection import STRATEGIES
-from repro.core.clustering import kmeans_cluster, update_sketch
+from repro.core.clustering import (
+    apply_sketch,
+    kmeans_cluster,
+    sketch_sign_vector,
+)
 from repro.core.trajectory import predict_rttg
 from repro.core.twin import advance_twin, init_twin_state
 from repro.fl.client import make_local_trainer
 from repro.fl.partition import make_test_set, partition_clients
-from repro.fl.server import apply_delta, normalized_weights
-from repro.kernels.ops import fedavg_reduce_auto
+from repro.fl.server import apply_delta_flat, normalized_weights
+from repro.kernels.ops import fedavg_reduce_auto, pick_block_p, rttg_latency_auto
 from repro.sharding import split_params
-from repro.utils import fold_in_str, unflatten_from_vector
+from repro.utils import flatten_to_vector, fold_in_str, unflatten_from_vector
 
 # lax.switch branch order: the traced strategy axis indexes this tuple.
 STRATEGY_ORDER: Tuple[str, ...] = ("greedy", "gossip", "data", "network", "contextual")
@@ -65,13 +87,20 @@ ADVANCE_SUBSTEPS = 15
 
 
 class RoundState(NamedTuple):
-    """Everything a round mutates, as one device-resident pytree."""
+    """Everything a round mutates, as one device-resident pytree.
 
-    params: Any  # global model pytree
+    ``params`` is the FLAT (P,) fp32 model vector (see module docstring);
+    ``sketch_sign`` is a per-experiment constant (the Rademacher projection
+    signs) carried here so the rounds scan never re-draws a P-long
+    Bernoulli — XLA cannot hoist it out of the scan body on its own.
+    """
+
+    params: jax.Array  # (P,) flat fp32 global model vector
     twin: TwinState  # ground-truth traffic state
     sketches: jax.Array  # (N, sketch_dim) update sketches (stage 3)
     sketch_age: jax.Array  # (N,) rounds since last report
     clusters: jax.Array  # (N,) int32 data-cluster labels
+    sketch_sign: jax.Array  # (P padded,) Rademacher signs (per-experiment const)
     round: jax.Array  # () int32 completed-round counter
     sim_time: jax.Array  # () f32 cumulative simulated seconds
     key: jax.Array  # per-experiment base PRNG key (never advanced)
@@ -130,6 +159,12 @@ def flat_spec_of(params) -> Any:
     return (treedef, [x.shape for x in leaves], [x.dtype for x in leaves])
 
 
+def flat_size_of(param_spec) -> int:
+    """Total flat fp32 vector length of a ``flat_spec_of`` spec."""
+    _, shapes, _ = param_spec
+    return sum(int(functools.reduce(lambda a, b: a * b, s, 1)) for s in shapes)
+
+
 def experiment_key(dataset: str, strategy: str, seed: int) -> jax.Array:
     """The per-experiment base PRNG key (``RoundState.key``).
 
@@ -180,22 +215,30 @@ def init_state_traced(
     pre-folded experiment key (``experiment_key``).  The batched engine
     vmaps this inside its compiled grid program so grid setup is pure key
     stacking; the host path (``init_state``) calls the SAME function
-    eagerly — identical folds, bitwise-identical states.
+    eagerly — identical folds, bitwise-identical states.  The model pytree
+    is flattened to the (P,) carry layout HERE — flatten/unflatten are
+    exact (concat of fp32 ravels), so host and device init still agree
+    bitwise leaf for leaf.
 
     Cheap (model params + twin kinematics only); the heavy client shards
     are a separate step (``make_round_data``) so the batched engine can
     defer them to the device inside its compiled grid program.
     """
     params = init_params(fold_in_str(key, "model-init"))
+    params_vec, _ = flatten_to_vector(params)
+    sketch_sign = sketch_sign_vector(
+        fold_in_str(key, "selector"), params_vec.shape[0], fl.sketch_dim
+    )
     twin_state = init_twin_state(scn, twin_init_key(key))
     regions = regions_of(twin_state.pos, scn)
     N = fl.num_clients
     state = RoundState(
-        params=params,
+        params=params_vec,
         twin=twin_state,
         sketches=jnp.zeros((N, fl.sketch_dim), jnp.float32),
         sketch_age=jnp.full((N,), jnp.inf, jnp.float32),
         clusters=jnp.zeros((N,), jnp.int32),
+        sketch_sign=sketch_sign,
         round=jnp.zeros((), jnp.int32),
         sim_time=jnp.zeros((), jnp.float32),
         key=key,
@@ -267,21 +310,28 @@ def init_experiment(
     return state, make_round_data(state.key, dataset, fl, regions)
 
 
-def make_warmup(loss_fn, fl: FLConfig):
+def _row(leaf, data_idx):
+    """A RoundData leaf for THIS experiment: lazy row gather when stacked."""
+    return leaf if data_idx is None else leaf[data_idx]
+
+
+def make_warmup(loss_fn, fl: FLConfig, param_spec):
     """Deadline-rule bootstrap: every client reports one gradient sketch,
-    then the first clustering runs.  Pure: (state, data) -> state."""
+    then the first clustering runs.  Pure: (state, data[, data_idx]) -> state."""
     one_step = make_local_trainer(loss_fn, fl.learning_rate, 1, fl.batch_size)
 
-    def warmup(state: RoundState, data: RoundData) -> RoundState:
+    def warmup(state: RoundState, data: RoundData, data_idx=None) -> RoundState:
         bs = fl.batch_size
+        params = unflatten_from_vector(state.params, param_spec)
         _, vecs = one_step(
-            state.params,
-            data.images[:, :bs],
-            data.labels[:, :bs],
+            params,
+            _row(data.images, data_idx)[:, :bs],
+            _row(data.labels, data_idx)[:, :bs],
             fold_in_str(state.key, "warmup"),
         )
-        k_sketch = fold_in_str(state.key, "selector")
-        sketches = jax.vmap(lambda v: update_sketch(v, k_sketch, fl.sketch_dim))(vecs)
+        sketches = jax.vmap(
+            lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
+        )(vecs)
         k_km = fold_in_str(jax.random.fold_in(state.key, 0), "kmeans")
         clusters, _ = kmeans_cluster(sketches, k_km, fl.num_clusters)
         return state._replace(
@@ -294,14 +344,19 @@ def make_warmup(loss_fn, fl: FLConfig):
 
 
 def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
-                    param_spec, strategies: Sequence[str] = STRATEGY_ORDER):
+                    param_spec, strategies: Sequence[str] = STRATEGY_ORDER,
+                    fused: bool = True):
     """Build the pure round transition for a fixed FL config.
 
     Static arguments select the compiled program; ``scn`` (ScenarioParams or
-    TrafficConfig), ``strategy_idx`` and ``do_eval`` are traced so the same
-    program serves the whole grid.  ``strategy_idx`` indexes ``strategies``
-    (not the global order): a vmapped switch executes every branch for
-    every lane, so carrying only the grid's strategies matters.
+    TrafficConfig), ``strategy_idx``, ``do_eval`` and the optional
+    ``do_recluster`` / ``data_idx`` are traced so the same program serves
+    the whole grid.  ``strategy_idx`` indexes ``strategies`` (not the
+    global order): a vmapped switch executes every branch for every lane,
+    so carrying only the grid's strategies matters.
+
+    ``fused`` selects the one-sweep ``rttg_latency`` geometry path
+    (default) vs the legacy composition — bitwise-identical by contract.
     """
     strategies = tuple(strategies)
     trainer = make_local_trainer(
@@ -309,21 +364,67 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
     )
     n_select = fl.n_select
     N, K = fl.num_clients, cohort_size
+    P = flat_size_of(param_spec)
     compute_s = fl.local_epochs * fl.compute_s_per_epoch
     mb = jnp.asarray(model_bytes, jnp.float32)
+    cr = fl.connection_rate
     nan = jnp.float32(jnp.nan)
 
-    def _eval(params, data):
-        m = loss_fn(params, {"images": data.test_x, "labels": data.test_y})[1]
+    def _eval(params_vec, data, data_idx):
+        params = unflatten_from_vector(params_vec, param_spec)
+        batch = {"images": _row(data.test_x, data_idx),
+                 "labels": _row(data.test_y, data_idx)}
+        m = loss_fn(params, batch)[1]
         return m["accuracy"].astype(jnp.float32), m["ce"].astype(jnp.float32)
 
-    def _elect(rttg, scn, clusters, k, strategy_idx):
-        """Stages 2+4: predict the future RTTG, then elect via lax.switch."""
+    def _forced(key):
+        """The forced connection-rate Bernoulli (Tab. I's CR < 1 rows).
+
+        Drawn OUTSIDE the fused kernel — identical key, identical shape to
+        the draw ``core.network.connectivity`` makes inside the unfused
+        composition, so the two paths consume the same bits.
+        """
+        if cr >= 1.0:
+            return None
+        return jax.random.bernoulli(key, cr, (N,))
+
+    def _predicted(twin, scn, rk):
+        """Stage 1+2 geometry: fused observations -> predicted latency/conn."""
+        k_obs = fold_in_str(rk, "observe")
+        cams = emit_cams(twin, scn, k_obs)
+        cpms = emit_cpms(twin, scn, k_obs)
+        k_cr = fold_in_str(rk, "cr")
+        if fused:
+            # one-sweep path: plain fused kinematics straight into the
+            # rttg_latency chain — no intermediate RTTG, no (N, N) adjacency
+            pos, speed, accel, _ = fuse_kinematics(cams, cpms, scn)
+            return rttg_latency_auto(
+                pos, speed, accel, twin.t, mb, _forced(k_cr), scn, predict=True
+            )
+        rttg = fuse_messages(cams, cpms, twin.t, scn)
         future = predict_rttg(rttg, scn.predict_horizon_s, scn)
         lat_pred = latency_model(future, mb, scn)
-        connected = connectivity(
-            future, scn, fl.connection_rate, fold_in_str(k, "cr")
+        connected = connectivity(future, scn, cr, k_cr)
+        return lat_pred, connected
+
+    def _realized(mid_twin, scn, rk):
+        """Mid-round geometry on the TRUE evolved topology."""
+        k_cr = fold_in_str(rk, "upload-cr")
+        if fused:
+            return rttg_latency_auto(
+                mid_twin.pos, mid_twin.speed, mid_twin.accel, mid_twin.t, mb,
+                _forced(k_cr), scn, predict=False,
+            )
+        mid_rttg = build_rttg(
+            mid_twin.t, mid_twin.pos, mid_twin.speed, mid_twin.accel,
+            jnp.zeros_like(mid_twin.pos), scn,
         )
+        real_lat = latency_model(mid_rttg, mb, scn)
+        still_conn = connectivity(mid_rttg, scn, cr, k_cr)
+        return real_lat, still_conn
+
+    def _elect(connected, lat_pred, clusters, k, strategy_idx):
+        """Stage 4: election over the predicted topology via lax.switch."""
         branches = [
             functools.partial(
                 lambda name, kk, conn, lat, cl: STRATEGIES[name](
@@ -334,39 +435,42 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             for name in strategies
         ]
         if len(branches) == 1:
-            mask = branches[0](k, connected, lat_pred, clusters)
-        else:
-            mask = jax.lax.switch(
-                strategy_idx, branches, k, connected, lat_pred, clusters
-            )
-        return mask, lat_pred
+            return branches[0](k, connected, lat_pred, clusters)
+        return jax.lax.switch(
+            strategy_idx, branches, k, connected, lat_pred, clusters
+        )
 
-    def round_step(state: RoundState, scn, strategy_idx, data: RoundData, do_eval):
+    def round_step(state: RoundState, scn, strategy_idx, data: RoundData,
+                   do_eval, do_recluster=None, data_idx=None):
         rk = jax.random.fold_in(state.key, state.round)
 
-        # ---- stage 1: fuse CAM/CPM into the RTTG -----------------------
-        k_obs = fold_in_str(rk, "observe")
-        cams = emit_cams(state.twin, scn, k_obs)
-        cpms = emit_cpms(state.twin, scn, k_obs)
-        rttg = fuse_messages(cams, cpms, state.twin.t, scn)
+        # ---- stages 1+2: fuse CAM/CPM, predict, price the topology -----
+        lat_pred, connected = _predicted(state.twin, scn, rk)
 
-        # ---- stages 2+4: predict + elect -------------------------------
-        mask, lat_pred = _elect(rttg, scn, state.clusters, rk, strategy_idx)
+        # ---- stage 4: elect --------------------------------------------
+        mask = _elect(connected, lat_pred, state.clusters, rk, strategy_idx)
         n_selected = jnp.sum(mask).astype(jnp.int32)
 
         # ---- fixed-size cohort gather ----------------------------------
         # Selected client ids in ascending order fill the first slots; the
         # rest are no-op padding (zeroed data + zeroed updates) — never a
-        # redundant retraining of client 0.
+        # redundant retraining of client 0.  Under a stacked ``data`` the
+        # row and cohort gathers fuse into ONE (data_idx, idx_c) gather per
+        # leaf — no per-lane copy of the full client shard.
         order = jnp.where(mask, jnp.arange(N), N + jnp.arange(N))
         idx = jnp.sort(order)[:K]
         slot_valid = idx < N
         idx_c = jnp.where(slot_valid, idx, 0)
 
-        dmask = slot_valid.reshape((K,) + (1,) * (data.images.ndim - 1))
-        imgs = data.images[idx_c] * dmask
-        lbls = jnp.where(slot_valid[:, None], data.labels[idx_c], 0)
-        _, vecs = trainer(state.params, imgs, lbls, fold_in_str(rk, "local"))
+        if data_idx is None:
+            imgs, lbls = data.images[idx_c], data.labels[idx_c]
+        else:
+            imgs, lbls = data.images[data_idx, idx_c], data.labels[data_idx, idx_c]
+        dmask = slot_valid.reshape((K,) + (1,) * (imgs.ndim - 1))
+        imgs = imgs * dmask
+        lbls = jnp.where(slot_valid[:, None], lbls, 0)
+        params = unflatten_from_vector(state.params, param_spec)
+        _, vecs = trainer(params, imgs, lbls, fold_in_str(rk, "local"))
         vecs = vecs * slot_valid[:, None]
 
         # ---- realized round economics on the TRUE evolved topology -----
@@ -377,14 +481,7 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             state.twin, scn, fold_in_str(rk, "mid"), mean_compute,
             num_substeps=ADVANCE_SUBSTEPS,
         )
-        mid_rttg = build_rttg(
-            mid_twin.t, mid_twin.pos, mid_twin.speed, mid_twin.accel,
-            jnp.zeros_like(mid_twin.pos), scn,
-        )
-        real_lat = latency_model(mid_rttg, mb, scn)
-        still_conn = connectivity(
-            mid_rttg, scn, fl.connection_rate, fold_in_str(rk, "upload-cr")
-        )
+        real_lat, still_conn = _realized(mid_twin, scn, rk)
         ok = slot_valid & still_conn[idx_c]
         ok_any = jnp.any(ok)
         timeout = jnp.float32(fl.round_timeout_s)
@@ -397,22 +494,17 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             n_selected > 0, dur_core + fl.server_agg_s, timeout
         )
 
-        # ---- FedAvg over deadline survivors (Pallas flat reduction) ----
-        # wider P-blocks for small cohorts: same VMEM budget (K*block_p*4B),
-        # 4x fewer grid steps over the flat update matrix
-        block_p = 8192 if K <= 64 else 2048
+        # ---- FedAvg over deadline survivors (flat Pallas reduction) ----
         w = normalized_weights(ok, jnp.full((K,), fl.samples_per_client, jnp.float32))
-        delta = unflatten_from_vector(
-            fedavg_reduce_auto(vecs, w, block_p=block_p), param_spec
-        )
-        agg = apply_delta(state.params, delta)
-        params = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(ok_any, new, old), agg, state.params
+        delta = fedavg_reduce_auto(vecs, w, block_p=pick_block_p(K, P))
+        params_vec = jnp.where(
+            ok_any, apply_delta_flat(state.params, delta), state.params
         )
 
         # ---- deadline rule: survivors report sketches ------------------
-        k_sketch = fold_in_str(state.key, "selector")
-        sks = jax.vmap(lambda v: update_sketch(v, k_sketch, fl.sketch_dim))(vecs)
+        sks = jax.vmap(
+            lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
+        )(vecs)
         scatter = jnp.where(ok, idx_c, N)  # out-of-bounds rows drop
         sketches = state.sketches.at[scatter].set(sks, mode="drop")
         sketch_age = state.sketch_age.at[scatter].set(0.0, mode="drop") + 1.0
@@ -428,16 +520,26 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         )
 
         # ---- end of round: recluster on schedule, strided eval ---------
+        # ``do_recluster`` arrives UNBATCHED from the engine's scan xs so
+        # the cond stays a genuine branch under vmap (a batched predicate
+        # would lower to a select that runs k-means EVERY round for every
+        # lane); the legacy host loop derives it from the (unbatched)
+        # round counter instead — same value, same branch.
         new_round = state.round + 1
+        if do_recluster is None:
+            do_recluster = new_round % max(fl.recluster_every, 1) == 0
         k_km = fold_in_str(jax.random.fold_in(state.key, new_round), "kmeans")
         clusters = jax.lax.cond(
-            new_round % max(fl.recluster_every, 1) == 0,
+            do_recluster,
             lambda: kmeans_cluster(sketches, k_km, fl.num_clusters)[0],
             lambda: state.clusters,
         )
         sim_time = state.sim_time + duration
         test_acc, test_loss = jax.lax.cond(
-            do_eval, lambda p: _eval(p, data), lambda p: (nan, nan), params
+            do_eval,
+            lambda p: _eval(p, data, data_idx),
+            lambda p: (nan, nan),
+            params_vec,
         )
 
         metrics = RoundMetrics(
@@ -458,7 +560,7 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             test_loss=test_loss,
         )
         new_state = state._replace(
-            params=params,
+            params=params_vec,
             twin=twin,
             sketches=sketches,
             sketch_age=sketch_age,

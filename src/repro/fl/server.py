@@ -26,6 +26,18 @@ def apply_delta(global_params, delta):
     )
 
 
+def apply_delta_flat(params_vec: jax.Array, delta_vec: jax.Array) -> jax.Array:
+    """``apply_delta`` for the flat (P,) fp32 carry layout.
+
+    The round core carries the global model as one fp32 vector
+    (``repro.fl.rounds``), so the update is a single AXPY; the fp32
+    accumulation of ``apply_delta`` is inherent (the carry IS fp32 — use
+    sites cast back per-leaf via the flat spec).  Keep in lockstep with
+    ``apply_delta`` above.
+    """
+    return params_vec + delta_vec
+
+
 @jax.jit
 def fedavg_aggregate(global_params, updates, weights):
     """global <- global + sum_k w_k * update_k  (weights already normalized).

@@ -56,26 +56,48 @@ class FLSimulation:
         self.state, self.data = init_experiment(
             self.api, fl_cfg, traffic_cfg, dataset, strategy, key
         )
-        self.key = self.state.key
-        self.model_bytes = float(tree_bytes(self.state.params))
+        # the round core carries the model as a flat (P,) vector; the
+        # pytree layout (and byte count) come from an abstract init trace
+        from repro.sharding import split_params
+
+        param_tree = jax.eval_shape(
+            lambda k: split_params(self.api.init(k))[0], jax.random.key(0)
+        )
+        self.param_spec = flat_spec_of(param_tree)
+        self.model_bytes = float(tree_bytes(param_tree))
         self._scn = scenario_params(traffic_cfg)
         self._strategy_idx = jnp.zeros((), jnp.int32)  # sole branch
+        # donate the carried state: one buffer per experiment, updated in
+        # place round over round (mirrors the engine's donated scan carry)
         self._step = jax.jit(
             make_round_step(
                 self.api.loss,
                 fl_cfg,
                 cohort_size_for(fl_cfg, (strategy,)),
                 self.model_bytes,
-                flat_spec_of(self.state.params),
+                self.param_spec,
                 strategies=(strategy,),
-            )
+            ),
+            donate_argnums=(0,),
         )
-        self._warmup = jax.jit(make_warmup(self.api.loss, fl_cfg))
+        self._warmup = jax.jit(
+            make_warmup(self.api.loss, fl_cfg, self.param_spec)
+        )
 
     # -- convenience views over the functional state -----------------------
     @property
+    def key(self):
+        """The experiment's base PRNG key — read through the CURRENT state:
+        the donated per-round carry invalidates old state leaves, so caching
+        one at init would dangle after the first round."""
+        return self.state.key
+
+    @property
     def params(self):
-        return self.state.params
+        """The global model as its pytree view (the carry is flat)."""
+        from repro.utils import unflatten_from_vector
+
+        return unflatten_from_vector(self.state.params, self.param_spec)
 
     @property
     def twin_state(self):

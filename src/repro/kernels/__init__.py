@@ -2,16 +2,22 @@
 
   pairwise_cosine — stage-3 clustering Gram matrix (MXU, 128x128 tiles)
   fedavg_reduce   — stage-4 aggregation sweep (memory-bound, P-tiled)
+  rttg_latency    — fused per-round geometry chain (predict -> RSU attach
+                    -> latency -> connectivity, one N-block x R pass)
   swa_decode      — sliding-window GQA decode attention (online softmax)
 
 Each <name>.py holds the pl.pallas_call + BlockSpec geometry; ref.py holds
-the pure-jnp oracles; ops.py the backend-dispatching wrappers.
+the pure-jnp oracles; ops.py the backend-dispatching wrappers and the
+shared tile-size policy (``pick_block_p``).
 """
 from repro.kernels.ops import (
     fedavg_reduce,
     fedavg_reduce_auto,
     pairwise_cosine,
     pairwise_cosine_auto,
+    pick_block_p,
+    rttg_latency,
+    rttg_latency_auto,
     ssd_scan,
     ssd_scan_auto,
     swa_decode,
@@ -22,11 +28,14 @@ from repro.kernels import ref
 __all__ = [
     "pairwise_cosine",
     "fedavg_reduce",
+    "rttg_latency",
     "swa_decode",
     "ssd_scan",
     "ssd_scan_auto",
     "pairwise_cosine_auto",
     "fedavg_reduce_auto",
+    "rttg_latency_auto",
     "swa_decode_auto",
+    "pick_block_p",
     "ref",
 ]

@@ -1,46 +1,137 @@
-"""Jit'd dispatch wrappers for the Pallas kernels.
+"""Dispatch wrappers + tiling policy for the Pallas kernels.
 
-On CPU (this container) the kernels run with ``interpret=True`` — the body
-executes in Python against the same BlockSpec tiling, which is how the
-TPU-target geometry is validated offline.  On TPU backends they compile.
+Three execution modes per kernel:
+
+  * ``compiled``  — TPU backends: the Pallas kernel lowers to Mosaic.
+  * ``interpret`` — the kernel body executes in Python against the same
+    BlockSpec tiling; this is how the TPU-target geometry is validated
+    offline (tests/test_kernels.py, kernel_bench.py) and can be forced
+    process-wide with ``REPRO_KERNELS_INTERPRET=1``.
+  * ``ref``       — the pure-jnp oracle from ``kernels.ref`` (the kernels'
+    correctness contract).  This is the default OFF-TPU production path for
+    the FL round kernels: interpret-mode tiling walks materialize a full
+    operand copy per grid step (measured ~7x the whole round program on the
+    CPU container — see docs/performance.md), while the oracle is a single
+    fused XLA op.  Kernel geometry still gets exercised every PR through
+    the tier-1 interpret parity tests.
+
 ``*_auto`` entry points pick the mode from the default backend; the FL
-server and clustering stages call these.
+server, round core and clustering stages call these.  ``swa_decode`` /
+``ssd_scan`` keep their historical interpret-off-TPU behavior (serving
+paths validate through them).
+
+This module is also the single home of the tile-size policy:
+``pick_block_p`` (flat reductions) replaces the ad-hoc per-call-site
+constants so the round step and the benches stay in lockstep.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
+from repro.kernels import ref
 from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.pairwise_cosine import pairwise_cosine
+from repro.kernels.rttg_latency import rttg_latency
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.swa_decode import swa_decode
 
 __all__ = [
     "pairwise_cosine",
     "fedavg_reduce",
+    "rttg_latency",
     "swa_decode",
     "ssd_scan",
     "pairwise_cosine_auto",
     "fedavg_reduce_auto",
+    "rttg_latency_auto",
     "swa_decode_auto",
+    "ssd_scan_auto",
+    "pick_block_p",
 ]
 
+# VMEM the flat-reduction working set may occupy: the (K, block_p) update
+# tile dominates (weights row + output row are K + block_p floats).  2 MB
+# keeps 8x headroom under the 16 MB/core budget for double buffering and
+# neighboring stages.
+FEDAVG_VMEM_BUDGET = 2 * 1024 * 1024
+_BLOCK_P_MIN, _BLOCK_P_MAX = 128, 8192  # lane width .. diminishing returns
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+
+def pick_block_p(K: int, P: int, vmem_budget: int = FEDAVG_VMEM_BUDGET) -> int:
+    """Column-tile width for flat (K, P) reductions (``fedavg_reduce``).
+
+    Invariant: ``K * block_p * 4 <= vmem_budget`` — the per-program VMEM
+    working set never exceeds the budget, whatever the cohort width.  Under
+    that cap the widest power-of-two tile wins (fewer grid steps = fewer
+    HBM descriptor walks for small cohorts), clamped to
+    [``_BLOCK_P_MIN``, ``_BLOCK_P_MAX``]: below the 128-lane width a tile
+    is pure padding, above 8192 wider tiles stop paying on P in the
+    ~1e5..1e7 range this engine sweeps.  ``P`` only caps the tile — a tile
+    wider than the padded vector would be pure padding.  Cohorts too wide
+    to fit even a single-lane tile (K > budget / 512) are rejected rather
+    than silently over-budget.
+    """
+    if K <= 0:
+        raise ValueError(f"cohort width must be positive, got K={K}")
+    if K * _BLOCK_P_MIN * 4 > vmem_budget:
+        raise ValueError(
+            f"cohort K={K} cannot fit a {_BLOCK_P_MIN}-lane tile in "
+            f"{vmem_budget} B of VMEM; raise the budget or shard the cohort"
+        )
+    fit = vmem_budget // (4 * K)
+    bp = _BLOCK_P_MIN
+    while bp * 2 <= min(fit, _BLOCK_P_MAX):
+        bp *= 2
+    if P > 0:
+        pow2_ceil_p = 1 << max(P - 1, 1).bit_length()
+        bp = min(bp, max(pow2_ceil_p, _BLOCK_P_MIN))
+    assert K * bp * 4 <= vmem_budget  # the invariant, by construction
+    return bp
+
+
+def _mode() -> str:
+    if jax.default_backend() == "tpu":
+        return "compiled"
+    if os.environ.get("REPRO_KERNELS_INTERPRET"):
+        return "interpret"
+    return "ref"
 
 
 def pairwise_cosine_auto(x, **kw):
-    return pairwise_cosine(x, interpret=_interpret(), **kw)
+    mode = _mode()
+    if mode == "ref":
+        return ref.pairwise_cosine(x)
+    return pairwise_cosine(x, interpret=mode == "interpret", **kw)
 
 
 def fedavg_reduce_auto(updates, weights, **kw):
-    return fedavg_reduce(updates, weights, interpret=_interpret(), **kw)
+    mode = _mode()
+    if mode == "ref":
+        return ref.fedavg_reduce(updates, weights)
+    kw.setdefault("block_p", pick_block_p(*updates.shape))
+    return fedavg_reduce(updates, weights, interpret=mode == "interpret", **kw)
+
+
+def rttg_latency_auto(pos, speed, accel, t, model_bytes, forced, cfg, *,
+                      predict, **kw):
+    mode = _mode()
+    if mode == "ref":
+        return ref.rttg_latency(
+            pos, speed, accel, t, model_bytes, forced, cfg, predict
+        )
+    return rttg_latency(
+        pos, speed, accel, t, model_bytes, forced, cfg, predict=predict,
+        interpret=mode == "interpret", **kw,
+    )
 
 
 def swa_decode_auto(q, k, v, kv_pos, pos, **kw):
-    return swa_decode(q, k, v, kv_pos, pos, interpret=_interpret(), **kw)
+    return swa_decode(q, k, v, kv_pos, pos,
+                      interpret=jax.default_backend() != "tpu", **kw)
 
 
 def ssd_scan_auto(xh, dt, A, Bs, Cs, **kw):
-    return ssd_scan(xh, dt, A, Bs, Cs, interpret=_interpret(), **kw)
+    return ssd_scan(xh, dt, A, Bs, Cs,
+                    interpret=jax.default_backend() != "tpu", **kw)

@@ -24,6 +24,34 @@ def fedavg_reduce(updates: jax.Array, weights: jax.Array) -> jax.Array:
     )
 
 
+def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict):
+    """(N,) kinematics -> (latency (N,) f32, connected (N,) bool).
+
+    THE unfused composition: core pure forms chained exactly as the legacy
+    round path chains them (predict_kinematics -> rsu_geometry ->
+    latency_from_geometry / connected_from_snr).  The Pallas kernel's
+    bitwise contract is against this function — which is also what the
+    ``*_auto`` dispatch runs on non-TPU backends, where interpret-mode
+    tiling walks would be pure overhead.
+    """
+    from repro.core.network import (
+        connected_from_snr,
+        latency_from_geometry,
+        snr_from_dist,
+    )
+    from repro.core.rttg import rsu_geometry
+    from repro.core.trajectory import horizon_steps, predict_kinematics
+
+    if predict:
+        n = horizon_steps(cfg.predict_horizon_s, cfg)
+        pos, speed, accel = predict_kinematics(pos, speed, accel, n, cfg)
+        t = t + cfg.predict_horizon_s
+    _, dist3d, load = rsu_geometry(pos, cfg)
+    lat = latency_from_geometry(t, speed, dist3d, load, model_bytes, cfg)
+    conn = connected_from_snr(snr_from_dist(dist3d, cfg), cfg, forced)
+    return lat, conn
+
+
 def swa_decode(
     q: jax.Array,  # (B, Hkv, G, D)
     k: jax.Array,  # (B, C, Hkv, D)

@@ -168,6 +168,129 @@ def count_hlo_ops(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
 
 
+def round_step_stats(
+    num_clients: int = 12,
+    rounds: int = 5,
+    fused: bool = True,
+    grid: int = 4,
+) -> dict:
+    """FLOPs / HBM bytes of the compiled FL round program (per device).
+
+    Lowers the SAME jitted grid program ``ExperimentEngine.run_grid``
+    executes (a ``grid``-row strategy mix, ``rounds`` rounds, device-
+    resident init + partitioning) and walks its optimized HLO with
+    ``parse_hlo``, trip-weighting the per-round ops through the ``round``
+    named scope the engine tags its scan body with.  ``fused=False``
+    rebuilds the round step on the legacy composition path so the fused
+    kernel's arithmetic-intensity delta is measurable
+    (``benchmarks.roofline_report`` renders the comparison).
+    """
+    import itertools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import FLConfig, ModelConfig
+    from repro.core.scenarios import (
+        data_signature, scenario_config, scenario_params, stack_scenarios,
+    )
+    from repro.fl.engine import _eval_flags, _recluster_flags, ExperimentEngine
+    from repro.fl.rounds import experiment_key, make_round_step
+
+    mlp = ModelConfig(name="mlp", family="mlp", num_layers=0, d_model=0,
+                      num_heads=0, num_kv_heads=0, d_ff=48, vocab_size=0,
+                      image_shape=(28, 28, 1), num_classes=10, channels=())
+    fl = FLConfig(num_clients=num_clients, samples_per_client=32,
+                  batch_size=16, num_clusters=4, local_epochs=1)
+    strategies = ("contextual", "gossip")
+    scenarios = ("ring", "rush_hour")
+    eng = ExperimentEngine(mlp, fl, "mnist", strategies=strategies)
+    eng._ensure_spec()
+    if not fused:
+        eng._round_step = make_round_step(
+            eng.api.loss, eng.fl, eng.cohort_size, eng.model_bytes,
+            eng.param_spec, strategies=eng.strategies, fused=False,
+        )
+
+    runs = list(itertools.product(strategies, (0,), scenarios))[:grid]
+    keys, scn_list, sidx, didx, rows, row_of = [], [], [], [], [], {}
+    for strategy, seed, scenario in runs:
+        tc = scenario_config(scenario, num_vehicles=fl.num_clients)
+        keys.append(experiment_key("mnist", strategy, seed))
+        scn_list.append(scenario_params(tc))
+        sidx.append(strategies.index(strategy))
+        pair = (strategy, seed, data_signature(tc))
+        if pair not in row_of:
+            row_of[pair] = len(rows)
+            rows.append((keys[-1], scn_list[-1]))
+        didx.append(row_of[pair])
+    datas = (jnp.stack([k for k, _ in rows]),
+             stack_scenarios([s for _, s in rows]))
+    flags = (_eval_flags(rounds, rounds), _recluster_flags(rounds, fl.recluster_every))
+    lowered = eng._grid_fn.lower(
+        jnp.stack(keys), datas, stack_scenarios(scn_list),
+        jnp.asarray(sidx, jnp.int32), jnp.asarray(didx, jnp.int32), flags,
+    )
+    compiled = lowered.compile()
+    stats = parse_hlo(compiled.as_text(), {"round": float(rounds)})
+    ai = stats.dot_flops / max(stats.hbm_bytes, 1.0)
+    return {
+        "target": "round-step",
+        "fused": fused,
+        "grid": len(runs),
+        "rounds": rounds,
+        "num_clients": num_clients,
+        "dot_flops_per_device": stats.dot_flops,
+        "hbm_bytes_per_device": stats.hbm_bytes,
+        "arithmetic_intensity": ai,
+        "dot_flops_per_round": stats.dot_flops / rounds / max(len(runs), 1),
+        "hbm_bytes_per_round": stats.hbm_bytes / rounds / max(len(runs), 1),
+    }
+
+
+def main(argv=None) -> dict:
+    """CLI: ``python -m repro.launch.hlo_analysis --target round-step``.
+
+    Writes ``artifacts/roundstep.json`` with BOTH the fused and unfused
+    round-program accounts; ``benchmarks/roofline_report.py`` picks the
+    file up and reports the fusion win as an arithmetic-intensity delta.
+    """
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--target", default="round-step", choices=["round-step"])
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default artifacts/roundstep.json)")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "artifacts", "roundstep.json"
+    )
+    doc = {
+        "fused": round_step_stats(args.clients, args.rounds, fused=True),
+        "unfused": round_step_stats(args.clients, args.rounds, fused=False),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    for name, r in doc.items():
+        print(
+            f"round-step,{name},flops={r['dot_flops_per_device']:.3e},"
+            f"hbm_bytes={r['hbm_bytes_per_device']:.3e},"
+            f"ai={r['arithmetic_intensity']:.3f}"
+        )
+    print(
+        "round-step,ai_delta="
+        f"{doc['fused']['arithmetic_intensity'] / max(doc['unfused']['arithmetic_intensity'], 1e-12):.3f}x,"
+        f"out={os.path.abspath(out_path)}"
+    )
+    return doc
+
+
 def scope_trip_counts(cfg, shape) -> Dict[str, float]:
     """Static trip counts for every named scan scope of (cfg, shape).
 
@@ -215,3 +338,5 @@ def scope_trip_counts(cfg, shape) -> Dict[str, float]:
         if cfg.loss_chunk and s_mb > cfg.loss_chunk:
             trips["loss_chunk"] = float(-(-s_mb // cfg.loss_chunk))
     return trips
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,11 @@ TRAIN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
     "batch": ("pod", "data"),
     "client": ("pod", "data"),  # FL cohort axis
     "grid": ("pod", "data"),  # FL experiment-grid axis (engine shard_map)
+    # dedup RoundData rows, laid out (n_shards * M) so each device holds
+    # only the M rows its own grid lanes gather (engine shard-local plan;
+    # MUST shard over the same axes as "grid" — the row plan is built
+    # against the grid split)
+    "data_rows": ("pod", "data"),
     "seq": None,
     "embed": ("data",),  # ZeRO-3/FSDP shard of params over the data axis
     "embed_act": None,  # activations keep embed replicated (TP gathers)

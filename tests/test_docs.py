@@ -24,7 +24,8 @@ REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # resolvable no matter how pytest was invoked
 sys.path.insert(0, REPO)
 
-DOC_FILES = ["README.md", "docs/architecture.md", "docs/scenarios.md"]
+DOC_FILES = ["README.md", "docs/architecture.md", "docs/scenarios.md",
+             "docs/performance.md"]
 
 # repo-relative path-ish tokens we promise exist (skip globs and bare dirs
 # referenced with a trailing /)

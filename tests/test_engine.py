@@ -421,14 +421,27 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     kw2 = dict(seeds=(0, 1), scenarios=("ring", "rush_hour", "platoon"),
                rounds=3, eval_every=3)
     _close(sh.run_grid(**kw2), base.run_grid(**kw2))
+    # shard-local RoundData: a seed-heavy grid (4 seeds x 1 scenario -> 4
+    # dedup rows on 4 shards) must materialize ONLY each shard's own row —
+    # per-shard row count strictly below the total dedup rows — while the
+    # metrics stay row-for-row parity with the vmapped path
+    kw3 = dict(seeds=(0, 1, 2, 3), scenarios=("ring",), rounds=2,
+               eval_every=2)
+    rs3, rb3 = sh.run_grid(**kw3), base.run_grid(**kw3)
+    plan = sh.last_data_plan
+    assert plan is not None and plan["n_shards"] == 4, plan
+    assert plan["total_rows"] == 4, plan
+    assert plan["rows_per_shard"] == 1 < plan["total_rows"], plan
+    _close(rs3, rb3)
     print("SHARDED_GRID_OK")
 """)
 
 
 @pytest.mark.slow
 def test_sharded_grid_matches_vmapped_on_4_devices():
-    """shard_map grid == vmapped grid, row for row (subprocess: the fake
-    device count must be set before jax initializes)."""
+    """shard_map grid == vmapped grid, row for row, and each shard
+    materializes only its own RoundData rows (subprocess: the fake device
+    count must be set before jax initializes)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)

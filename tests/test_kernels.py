@@ -1,4 +1,11 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True).
+
+Explicitly ``tier1``: every PR exercises the kernel tiling geometry in
+interpret mode, whatever the backend — the shape grids below deliberately
+include NON-multiples of every block size (both just-under and just-over a
+block boundary) and the K=1 degenerate cohort, so the padding edges of the
+BlockSpecs are part of the contract, not an accident of the sweep.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,8 +13,15 @@ import pytest
 
 from repro.kernels import fedavg_reduce, pairwise_cosine, ref, ssd_scan, swa_decode
 
+pytestmark = pytest.mark.tier1
 
-@pytest.mark.parametrize("n,d", [(7, 64), (100, 1024), (128, 512), (33, 2000)])
+
+@pytest.mark.parametrize("n,d", [
+    (7, 64), (100, 1024), (128, 512), (33, 2000),
+    # padding edges: one under / one over the (block_n=128, block_k=512)
+    # tile boundaries, and a single-row Gram
+    (127, 511), (129, 513), (1, 512), (256, 1)
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pairwise_cosine_matches_ref(n, d, dtype):
     x = jax.random.normal(jax.random.key(n * d), (n, d)).astype(dtype)
@@ -20,7 +34,12 @@ def test_pairwise_cosine_matches_ref(n, d, dtype):
     assert float(jnp.max(jnp.abs(out - out.T))) < 5e-5 + (0.05 if dtype == jnp.bfloat16 else 0)
 
 
-@pytest.mark.parametrize("k,p", [(4, 100), (16, 5000), (100, 2048), (3, 130000)])
+@pytest.mark.parametrize("k,p", [
+    (4, 100), (16, 5000), (100, 2048), (3, 130000),
+    # padding edges: K=1 cohorts and P one off either side of the default
+    # 2048 tile (plus an exact multiple, which must not gain a pad block)
+    (1, 1), (1, 2047), (1, 130000), (5, 2047), (5, 2049), (5, 4096),
+])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fedavg_reduce_matches_ref(k, p, dtype):
     u = jax.random.normal(jax.random.key(k), (k, p)).astype(dtype)
@@ -30,6 +49,23 @@ def test_fedavg_reduce_matches_ref(k, p, dtype):
     expect = ref.fedavg_reduce(u, w)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=tol, rtol=tol)
+    assert out.shape == (p,)
+
+
+def test_fedavg_reduce_respects_pick_block_p_geometry():
+    """The round step's tile policy (kernels.ops.pick_block_p) drives the
+    same kernel the sweep above validates — parity must hold at exactly
+    the tile the policy picks for the engine's hot shapes."""
+    from repro.kernels import pick_block_p
+
+    for k, p in [(2, 163_840), (100, 38_656), (1, 512)]:
+        u = jax.random.normal(jax.random.key(k), (k, p))
+        w = jnp.ones((k,)) / k
+        out = fedavg_reduce(u, w, block_p=pick_block_p(k, p), interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.fedavg_reduce(u, w)),
+            atol=1e-5, rtol=1e-5,
+        )
 
 
 @pytest.mark.parametrize("window,softcap", [(0, 0.0), (64, 0.0), (0, 30.0), (37, 50.0)])

@@ -1,0 +1,201 @@
+"""One-sweep round geometry: fused rttg_latency vs the unfused composition.
+
+The fused path's correctness contract is BITWISE: the Pallas kernel (in
+interpret mode on CPU) must reproduce ``kernels.ref.rttg_latency`` — the
+composition of the core pure forms — bit for bit, and a whole round
+through the fused path must reproduce the unfused round bit for bit.
+These tests are tier-1 (they run every PR) so the kernel tiling geometry
+is exercised continuously, not just on TPU targets.
+
+Also here: the ``pick_block_p`` VMEM-budget invariant and the shard-local
+RoundData row planner (pure host logic; the 4-fake-device integration
+parity lives in tests/test_engine.py's subprocess test).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scenarios import scenario_config, scenario_params, stack_scenarios
+from repro.kernels import pick_block_p, ref, rttg_latency
+
+pytestmark = pytest.mark.tier1
+
+
+def _geometry(name, n, seed=0):
+    scn = scenario_params(scenario_config(name, num_vehicles=n))
+    ks = jax.random.split(jax.random.key(seed), 4)
+    pos = jax.random.uniform(ks[0], (n,), jnp.float32, 0.0, float(scn.ring_length_m))
+    speed = 14.0 + jax.random.normal(ks[1], (n,))
+    accel = 0.3 * jax.random.normal(ks[2], (n,))
+    forced = jax.random.bernoulli(ks[3], 0.6, (n,))
+    return scn, pos, speed, accel, forced
+
+
+@pytest.mark.parametrize("name", ["ring", "rsu_outage", "day_cycle"])
+@pytest.mark.parametrize("n,block_n", [(20, 256), (300, 128), (129, 64), (8, 8)])
+@pytest.mark.parametrize("predict", [True, False])
+def test_rttg_latency_kernel_bitwise_vs_ref(name, n, block_n, predict):
+    """Interpret-mode kernel == unfused composition, bit for bit — across
+    non-multiple-of-block N, dark RSUs and the congestion schedules."""
+    scn, pos, speed, accel, forced = _geometry(name, n)
+    t, mb = jnp.float32(77.5), jnp.float32(2e5)
+    lat_k, conn_k = rttg_latency(pos, speed, accel, t, mb, forced, scn,
+                                 predict=predict, block_n=block_n, interpret=True)
+    lat_r, conn_r = jax.jit(
+        lambda *a: ref.rttg_latency(*a, predict)
+    )(pos, speed, accel, t, mb, forced, scn)
+    np.testing.assert_array_equal(np.asarray(lat_k), np.asarray(lat_r))
+    np.testing.assert_array_equal(np.asarray(conn_k), np.asarray(conn_r))
+    assert conn_k.dtype == jnp.bool_
+
+
+def test_rttg_latency_no_forced_mask_matches_snr_only():
+    """forced=None must equal the CR=1.0 composition (no Bernoulli draw)."""
+    scn, pos, speed, accel, _ = _geometry("ring", 40)
+    t, mb = jnp.float32(0.0), jnp.float32(1e5)
+    lat_k, conn_k = rttg_latency(pos, speed, accel, t, mb, None, scn,
+                                 predict=True, interpret=True)
+    # pass scn as an argument: closing over it bakes the scenario leaves
+    # into jit constants, whose folding drifts a ulp vs the traced path
+    lat_r, conn_r = jax.jit(
+        lambda p, s, a, tt, m, scn_: ref.rttg_latency(p, s, a, tt, m, None, scn_, True)
+    )(pos, speed, accel, t, mb, scn)
+    np.testing.assert_array_equal(np.asarray(lat_k), np.asarray(lat_r))
+    np.testing.assert_array_equal(np.asarray(conn_k), np.asarray(conn_r))
+
+
+def test_rttg_latency_vmaps_over_scenario_lanes():
+    """The kernel batches like any jnp op: a vmapped grid of traced
+    scenarios (the engine's layout) equals per-lane kernel calls."""
+    rows = [_geometry(nm, 24, seed=i) for i, nm in
+            enumerate(["ring", "rush_hour", "rsu_outage"])]
+    scns = stack_scenarios([r[0] for r in rows])
+    pos = jnp.stack([r[1] for r in rows])
+    speed = jnp.stack([r[2] for r in rows])
+    accel = jnp.stack([r[3] for r in rows])
+    forced = jnp.stack([r[4] for r in rows])
+    t = jnp.float32(10.0)
+
+    lat_v, conn_v = jax.vmap(
+        lambda p, s, a, f, scn: rttg_latency(
+            p, s, a, t, jnp.float32(1e5), f, scn, predict=True, interpret=True
+        )
+    )(pos, speed, accel, forced, scns)
+    for i, (scn, p, s, a, f) in enumerate(rows):
+        lat_i, conn_i = rttg_latency(p, s, a, t, jnp.float32(1e5), f, scn,
+                                     predict=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(lat_v[i]), np.asarray(lat_i),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(conn_v[i]), np.asarray(conn_i))
+
+
+def _round_env(fused, connection_rate=0.7):
+    from repro.config import FLConfig
+    from repro.configs import get_config
+    from repro.fl.rounds import (
+        experiment_key, flat_spec_of, init_state_traced, make_round_data,
+        make_round_step,
+    )
+    from repro.models import build_model
+    from repro.sharding import split_params
+    from repro.utils import tree_bytes
+
+    fl = FLConfig(num_clients=10, samples_per_client=32, batch_size=16,
+                  num_clusters=3, local_epochs=1,
+                  connection_rate=connection_rate)
+    api = build_model(get_config("fl-mnist-mlp"))
+    init_params = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config("rush_hour", num_vehicles=10)
+    key = experiment_key("mnist", "contextual", 0)
+    state, regions = jax.jit(
+        lambda k: init_state_traced(init_params, fl, tc, k)
+    )(key)
+    data = make_round_data(key, "mnist", fl, regions)
+    spec_tree = jax.eval_shape(init_params, jax.random.key(0))
+    step = jax.jit(make_round_step(
+        api.loss, fl, fl.n_select, float(tree_bytes(spec_tree)),
+        flat_spec_of(spec_tree), ("contextual",), fused=fused,
+    ))
+    return state, data, scenario_params(tc), step
+
+
+@pytest.mark.parametrize("connection_rate", [1.0, 0.7])
+def test_fused_round_bitwise_vs_unfused(monkeypatch, connection_rate):
+    """THE tentpole guard: a full round through the fused kernel path (in
+    interpret mode) equals the legacy composition round bit for bit —
+    metrics AND every carried state leaf."""
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    state, data, scn, step_f = _round_env(True, connection_rate)
+    _, _, _, step_u = _round_env(False, connection_rate)
+    si = jnp.zeros((), jnp.int32)
+    sf, mf = step_f(state, scn, si, data, True)
+    su, mu = step_u(state, scn, si, data, True)
+    for name in mf._fields:
+        a, b = np.asarray(getattr(mf, name)), np.asarray(getattr(mu, name))
+        assert np.array_equal(a, b, equal_nan=True), name
+    leaves_f = jax.tree_util.tree_leaves_with_path(sf)
+    for (path, a), b in zip(leaves_f, jax.tree_util.tree_leaves(su)):
+        if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True), (
+            jax.tree_util.keystr(path)
+        )
+
+
+def test_fused_round_matches_on_ref_dispatch():
+    """Off-TPU production dispatch (ref mode, no interpret walk) keeps the
+    same bitwise equality — the ref IS the unfused composition."""
+    state, data, scn, step_f = _round_env(True)
+    _, _, _, step_u = _round_env(False)
+    si = jnp.zeros((), jnp.int32)
+    _, mf = step_f(state, scn, si, data, True)
+    _, mu = step_u(state, scn, si, data, True)
+    for name in mf._fields:
+        a, b = np.asarray(getattr(mf, name)), np.asarray(getattr(mu, name))
+        assert np.array_equal(a, b, equal_nan=True), name
+
+
+def test_pick_block_p_vmem_invariant():
+    """The tile policy's contract: working set <= budget, power-of-two,
+    clamped, and monotone non-increasing in K."""
+    from repro.kernels.ops import FEDAVG_VMEM_BUDGET, _BLOCK_P_MAX, _BLOCK_P_MIN
+
+    prev = None
+    for K in (1, 2, 3, 16, 64, 100, 256, 1024, 4096):
+        for P in (1, 100, 38_656, 163_840, 1_000_000, 10_000_000):
+            bp = pick_block_p(K, P)
+            assert K * bp * 4 <= FEDAVG_VMEM_BUDGET, (K, P, bp)
+            assert _BLOCK_P_MIN <= bp <= _BLOCK_P_MAX
+            assert bp & (bp - 1) == 0, f"block_p {bp} not a power of two"
+        bp_large_p = pick_block_p(K, 10_000_000)
+        if prev is not None:
+            assert bp_large_p <= prev, "wider cohorts must not widen tiles"
+        prev = bp_large_p
+    # the historical hot configs keep their geometry
+    assert pick_block_p(2, 163_840) == 8192
+    assert pick_block_p(64, 163_840) == 8192
+    with pytest.raises(ValueError):
+        pick_block_p(0, 100)
+    with pytest.raises(ValueError):  # cannot fit even one lane-wide tile
+        pick_block_p(8192, 1_000_000)
+
+
+def test_shard_local_rows_planner():
+    """Host planner: every lane finds its row in its own shard's slice,
+    and no shard is asked to hold more rows than it references."""
+    from repro.fl.partition import shard_local_rows
+
+    didx = np.asarray([0, 0, 1, 1, 2, 2, 3, 3], np.int32)  # seed-heavy
+    shard_rows, local_idx = shard_local_rows(didx, 4)
+    assert shard_rows.shape == (4, 1)  # 1 unique row per shard << 4 total
+    for lane in range(8):
+        s = lane // 2
+        assert shard_rows[s, local_idx[lane]] == didx[lane]
+    # mixed referencing: shards see different unique counts; M == worst case
+    didx2 = np.asarray([0, 1, 2, 2, 0, 0], np.int32)
+    shard_rows2, local_idx2 = shard_local_rows(didx2, 3)
+    assert shard_rows2.shape == (3, 2)
+    for lane in range(6):
+        s = lane // 2
+        assert shard_rows2[s, local_idx2[lane]] == didx2[lane]
