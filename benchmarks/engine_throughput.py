@@ -51,6 +51,15 @@ SCENARIOS = (
     "ring", "highway", "urban_grid", "rush_hour", "rsu_outage",
     "platoon", "hetero_fleet", "day_cycle",
 )
+# the FULL server-optimizer registry (tests/test_benchmarks.py guards this
+# against fl.aggregators.AGGREGATOR_ORDER): the --smoke probe sweeps it as
+# a grid axis so a registered-but-unbenched rule cannot dodge tier-1
+AGGREGATORS = ("fedavg", "fedavgm", "fedadam", "fedyogi", "stale")
+# the TIMED reference grid keeps the single-fedavg axis: its 24-run shape
+# is what `steady_speedup_vs_previous` compares across PRs, and the serial
+# legacy baseline runs plain FedAvg — the aggregator axis' throughput is
+# covered by the smoke sweep
+TIMED_AGGREGATORS = ("fedavg",)
 ROUNDS = 5
 EVAL_EVERY = 5
 
@@ -108,7 +117,8 @@ def _run(num_clients=20, samples=64):
     from repro.launch.mesh import make_grid_mesh
 
     model, fl = _grid_cfgs(num_clients, samples)
-    grid = [(st, se, sc) for st in STRATEGIES for se in SEEDS for sc in SCENARIOS]
+    grid = [(st, ag, se, sc) for st in STRATEGIES for ag in TIMED_AGGREGATORS
+            for se in SEEDS for sc in SCENARIOS]
     n_rounds_total = len(grid) * ROUNDS
 
     def grid_sweep(eng):
@@ -125,8 +135,10 @@ def _run(num_clients=20, samples=64):
     # sweeps alternate and keep the per-path minimum: process-global warmup
     # (eager-op program caches, thread pools) otherwise flatters whichever
     # path happens to run last.
-    eng = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES)
+    eng = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES,
+                           aggregators=TIMED_AGGREGATORS)
     eng_sh = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES,
+                              aggregators=TIMED_AGGREGATORS,
                               mesh=make_grid_mesh())
     sweep_b, sweep_sh = grid_sweep(eng), grid_sweep(eng_sh)
     t_batched_cold = _timed(sweep_b)
@@ -151,8 +163,10 @@ def _run(num_clients=20, samples=64):
 
     # ---- serial legacy loop on the same grid ----------------------------
     def serial_sweep():
-        for strategy, seed, scen in grid:
-            sim = FLSimulation(model, fl,
+        import dataclasses
+
+        for strategy, aggregator, seed, scen in grid:
+            sim = FLSimulation(model, dataclasses.replace(fl, aggregator=aggregator),
                                scenario_config(scen, num_vehicles=fl.num_clients),
                                "mnist", strategy, jax.random.key(seed))
             sim.run(ROUNDS)
@@ -166,8 +180,10 @@ def _run(num_clients=20, samples=64):
 
     return {
         "grid": len(grid),
-        "grid_shape": {"strategies": len(STRATEGIES), "seeds": len(SEEDS),
-                       "scenarios": len(SCENARIOS)},
+        "grid_shape": {"strategies": len(STRATEGIES),
+                       "aggregators": len(TIMED_AGGREGATORS),
+                       "seeds": len(SEEDS), "scenarios": len(SCENARIOS)},
+        "aggregators": list(TIMED_AGGREGATORS),
         "num_clients": num_clients,
         "samples_per_client": samples,
         "rounds_per_experiment": ROUNDS,
@@ -195,9 +211,10 @@ def smoke(num_clients=8, samples=32):
     No timing claims — this exists so tier-1 catches regressions on the
     path the real bench (and every campaign) exercises: device-resident
     init + on-device partitioning + the vmapped scan over a mixed grid
-    spanning the full scenario catalog.  Uncached (it is the regression
-    probe, stale results would defeat it), small enough for the test
-    suite (tests/test_benchmarks.py wires it in).  Never writes
+    spanning the full scenario catalog x the full aggregator registry
+    (every server optimizer batches as a grid axis).  Uncached (it is the
+    regression probe, stale results would defeat it), small enough for the
+    test suite (tests/test_benchmarks.py wires it in).  Never writes
     BENCH_engine.json — smoke timings are not trajectory data.
     """
     from repro.config import FLConfig
@@ -207,7 +224,8 @@ def smoke(num_clients=8, samples=32):
     model = get_config("fl-mnist-mlp")
     fl = FLConfig(num_clients=num_clients, samples_per_client=samples,
                   batch_size=16, num_clusters=4, local_epochs=1)
-    eng = ExperimentEngine(model, fl, "mnist", strategies=("contextual",))
+    eng = ExperimentEngine(model, fl, "mnist", strategies=("contextual",),
+                           aggregators=AGGREGATORS)
     t0 = time.perf_counter()
     res = eng.run_grid(seeds=(0,), scenarios=SCENARIOS, rounds=1, eval_every=1)
     jax.block_until_ready(res.metrics)
@@ -216,7 +234,7 @@ def smoke(num_clients=8, samples=32):
     r = {"grid": n, "rounds_per_experiment": 1, "total_rounds": n,
          "smoke_s": dt, "final_acc": res.final_accuracy()}
     print(f"engine-smoke,grid={n}x1r,scenarios={len(SCENARIOS)},"
-          f"elapsed={dt:.1f}s")
+          f"aggregators={len(AGGREGATORS)},elapsed={dt:.1f}s")
     return r
 
 

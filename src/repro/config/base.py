@@ -294,6 +294,19 @@ class FLConfig:
     server_agg_s: float = 0.05
     round_timeout_s: float = 15.0  # deadline a round pays when uploads miss it
     recluster_every: int = 5  # rounds between re-clustering (deadline rule)
+    # server optimizer (fl/aggregators.py registry; the engine sweeps the
+    # aggregator as a grid axis — this field drives the legacy single-run
+    # path and the CLI).  ``server_lr``/betas/tau parameterize the
+    # FedAvgM/FedAdam/FedYogi moment rules (Reddi et al., Adaptive
+    # Federated Optimization); plain fedavg ignores them.
+    aggregator: str = "fedavg"
+    server_lr: float = 1.0
+    server_beta1: float = 0.9
+    server_beta2: float = 0.99
+    server_tau: float = 1e-3
+    # FedProx client-side proximal term mu (0 = exact FedAvg local SGD;
+    # the mu=0 program is bitwise-identical to plain SGD by construction)
+    fedprox_mu: float = 0.0
     seed: int = 0
 
     @property

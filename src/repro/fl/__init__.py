@@ -1,10 +1,19 @@
-"""Federated-learning runtime: partitioning, clients, server, round core,
-the batched experiment engine, and the legacy per-round simulation API."""
+"""Federated-learning runtime: partitioning, clients, server, the
+aggregator (server-optimizer) registry, round core, the batched
+experiment engine, and the legacy per-round simulation API."""
 from repro.fl.partition import (
     client_images,
+    client_sample_counts,
     make_test_set,
     partition_clients,
     partition_labels,
+)
+from repro.fl.aggregators import (
+    AGGREGATOR_ORDER,
+    ServerHP,
+    apply_rule,
+    staleness_scale,
+    validate_aggregators,
 )
 from repro.fl.client import make_local_trainer
 from repro.fl.server import fedavg_aggregate
@@ -28,9 +37,15 @@ from repro.fl.engine import ExperimentEngine, GridResult
 from repro.fl.simulation import FLSimulation, time_to_accuracy
 
 __all__ = [
+    "AGGREGATOR_ORDER",
+    "ServerHP",
+    "apply_rule",
+    "staleness_scale",
+    "validate_aggregators",
     "partition_clients",
     "partition_labels",
     "client_images",
+    "client_sample_counts",
     "make_test_set",
     "make_local_trainer",
     "fedavg_aggregate",

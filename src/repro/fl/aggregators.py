@@ -1,0 +1,153 @@
+"""Pluggable server optimizers (aggregation rules) on the flat carry layout.
+
+The round core used to hardcode plain FedAvg: ``delta = fedavg_reduce(...)``
+followed by one AXPY into the flat ``(P,)`` parameter carry.  This module
+makes the server-side update a REGISTRY, swept as a grid axis exactly like
+``STRATEGY_ORDER``: every rule is a pure function
+
+    rule(hp, opt, params_vec, delta_vec, round) -> (opt, params_vec)
+
+on the flat layout — ``opt`` is the ``(m, v)`` pair of first/second-moment
+``(P,)`` fp32 vectors that ride the donated ``RoundState`` carry, ``delta``
+the already-reduced weighted cohort update — and ``apply_rule`` traces the
+registry through ``lax.switch`` so the aggregator axis vmaps/shards like
+any other.  The rules follow Reddi et al., *Adaptive Federated
+Optimization* (FedAvgM / FedAdam / FedYogi; no bias correction, as in the
+paper), with ``ServerHP`` carrying the static server hyperparameters from
+``FLConfig``.
+
+``stale`` is deliberately identical to ``fedavg`` HERE: staleness-aware
+aggregation acts in *weight space*, before the reduction — the round core
+replaces the hard deadline drop (weight 0 for clients disconnected at
+upload time) with ``staleness_scale`` of the realized per-client round
+time the fused ``rttg_latency`` chain already produced.  Keeping the rule
+a plain AXPY means the weight discount composes with any future moment
+rule unchanged.
+
+Hot-path note: the production reduce+update runs through the fused
+``kernels.server_update`` pass (``kernels.ops.server_update_auto``); the
+rules here are the semantic contract (``kernels.ref.server_update``
+composes ``ref.fedavg_reduce`` with ``apply_rule``) and the branches the
+legacy single-rule paths trace directly.  This module must stay free of
+``repro.kernels`` imports — the kernels' refs import it lazily.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# lax.switch branch order: the traced aggregator axis indexes this tuple.
+AGGREGATOR_ORDER: Tuple[str, ...] = (
+    "fedavg", "fedavgm", "fedadam", "fedyogi", "stale"
+)
+STALE_IDX = AGGREGATOR_ORDER.index("stale")
+
+
+class ServerHP(NamedTuple):
+    """Static server-optimizer hyperparameters (python floats: they select
+    the compiled program together with the rest of ``FLConfig``)."""
+
+    eta: float = 1.0  # server learning rate (fedavgm/fedadam/fedyogi)
+    beta1: float = 0.9  # first-moment decay
+    beta2: float = 0.99  # second-moment decay (adaptive rules)
+    tau: float = 1e-3  # adaptivity floor added to sqrt(v)
+
+
+def server_hp(fl) -> ServerHP:
+    """The ``ServerHP`` view of an ``FLConfig``."""
+    return ServerHP(
+        eta=float(fl.server_lr), beta1=float(fl.server_beta1),
+        beta2=float(fl.server_beta2), tau=float(fl.server_tau),
+    )
+
+
+def validate_aggregators(names: Sequence[str]) -> Tuple[str, ...]:
+    """Normalize + fail fast with the registered catalog (CLI-grade error)."""
+    names = tuple(names)
+    unknown = set(names) - set(AGGREGATOR_ORDER)
+    if unknown:
+        raise ValueError(
+            f"unknown aggregator(s) {sorted(unknown)}; registered catalog: "
+            f"{', '.join(AGGREGATOR_ORDER)}"
+        )
+    return names
+
+
+def init_opt_vectors(params_vec: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Zero (m, v) moment vectors matching the flat ``(P,)`` carry."""
+    z = jnp.zeros_like(params_vec, dtype=jnp.float32)
+    return z, z
+
+
+# ---------------------------------------------------------------------------
+# the rules (flat, pure; ``round`` is traced and reserved for schedule-aware
+# rules — none of the current registry reads it)
+# ---------------------------------------------------------------------------
+def _fedavg(hp: ServerHP, opt, params, delta, rnd):
+    """Plain FedAvg: one AXPY, moments untouched (the pre-registry rule)."""
+    return opt, params + delta
+
+
+def _fedavgm(hp: ServerHP, opt, params, delta, rnd):
+    """Server momentum: m <- beta1 m + delta; params <- params + eta m."""
+    m, v = opt
+    m = hp.beta1 * m + delta
+    return (m, v), params + hp.eta * m
+
+
+def _fedadam(hp: ServerHP, opt, params, delta, rnd):
+    """FedAdam: EMA moments, adaptive step eta m / (sqrt(v) + tau)."""
+    m, v = opt
+    m = hp.beta1 * m + (1.0 - hp.beta1) * delta
+    v = hp.beta2 * v + (1.0 - hp.beta2) * (delta * delta)
+    return (m, v), params + hp.eta * m / (jnp.sqrt(v) + hp.tau)
+
+
+def _fedyogi(hp: ServerHP, opt, params, delta, rnd):
+    """FedYogi: sign-controlled second moment (additive-when-small)."""
+    m, v = opt
+    m = hp.beta1 * m + (1.0 - hp.beta1) * delta
+    d2 = delta * delta
+    v = v - (1.0 - hp.beta2) * d2 * jnp.sign(v - d2)
+    return (m, v), params + hp.eta * m / (jnp.sqrt(v) + hp.tau)
+
+
+def _stale(hp: ServerHP, opt, params, delta, rnd):
+    """Staleness-aware FedAvg: the discount lives in the cohort weights
+    (``staleness_scale``), so the parameter rule is fedavg's AXPY."""
+    return opt, params + delta
+
+
+_RULES = (_fedavg, _fedavgm, _fedadam, _fedyogi, _stale)
+assert len(_RULES) == len(AGGREGATOR_ORDER)
+
+
+def apply_rule(agg_idx, opt, params, delta, rnd, hp: ServerHP):
+    """Dispatch one registered rule by its GLOBAL ``AGGREGATOR_ORDER`` index.
+
+    ``agg_idx`` is traced (the grid's aggregator axis); a vmapped switch
+    executes every branch per lane, which is fine — every rule is a couple
+    of elementwise ``(P,)`` sweeps.
+    """
+    branches = [functools.partial(r, hp) for r in _RULES]
+    return jax.lax.switch(agg_idx, branches, opt, params, delta, rnd)
+
+
+def staleness_scale(per_slot, timeout):
+    """Weight discount for deadline-missing stragglers.
+
+    ``per_slot`` is the realized per-client round time (upload latency on
+    the TRUE evolved topology + local compute) the round core already
+    computed; ``timeout`` the round deadline.  A straggler's update is
+    modeled as landing one reconnect later and discounted by
+
+        timeout / (timeout + per_slot)  ==  1 / (1 + per_slot/timeout)
+
+    — the (1 + staleness)^-1 polynomial schedule of FedAsync (Xie et al.)
+    with staleness measured in deadline units.  Survivors keep weight 1;
+    the round core applies this only under the ``stale`` rule.
+    """
+    return timeout / (timeout + per_slot)

@@ -22,14 +22,23 @@ def make_local_trainer(
     lr: float,
     epochs: int,
     batch_size: int,
+    mu: float = 0.0,
 ) -> Callable:
     """Build jit'd cohort trainer.
 
     Returned fn: (global_params, images (K,n,...), labels (K,n), key)
       -> (updates pytree with leading K, update_vecs (K, P_flat))
+
+    ``mu`` is the FedProx proximal coefficient: each local step descends
+    ``loss + (mu/2) ||p - p_global||^2``, i.e. the traced gradient gains
+    ``mu * (p - p_global)`` pulling drifting clients back toward the
+    global model (Li et al., FedProx) — the standard non-iid stabilizer
+    the aggregator axis is swept against.  The ``mu == 0`` gate is
+    STATIC: the default program contains no proximal term at all, so
+    plain FedAvg local SGD stays bitwise-identical by construction.
     """
 
-    def local_sgd(params, images, labels, key):
+    def local_sgd(global_params, images, labels, key):
         n = images.shape[0]
         spe = max(n // batch_size, 1)
         perm_keys = jax.random.split(key, epochs)
@@ -41,10 +50,14 @@ def make_local_trainer(
         def step(p, bidx):
             batch = {"images": images[bidx], "labels": labels[bidx]}
             g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+            if mu:
+                g = jax.tree_util.tree_map(
+                    lambda gw, w, w0: gw + mu * (w - w0), g, p, global_params
+                )
             p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
             return p, None
 
-        params, _ = jax.lax.scan(step, params, idx)
+        params, _ = jax.lax.scan(step, global_params, idx)
         return params
 
     @jax.jit

@@ -9,8 +9,10 @@ round.  This engine runs a whole grid as a single XLA program:
     unbatched predicates — a genuine branch under vmap, not a both-sides
     select);
   * the grid axis is a ``vmap`` over (RoundState, ScenarioParams, strategy
-    index, data row index), so strategies, seeds and scenarios batch
-    together;
+    index, aggregator index, data row index), so strategies, server
+    aggregation rules (``fl.aggregators.AGGREGATOR_ORDER``), seeds and
+    scenarios batch together — a (strategy x aggregator x seed x scenario)
+    grid is one program;
   * the scan carry (argument 0: stacked states / experiment keys) is
     DONATED to the compiled program (``donate_argnums``) and the carried
     model is the flat (P,) vector layout (``rounds.RoundState``), so
@@ -59,11 +61,13 @@ Usage:
 
     eng = ExperimentEngine(model_cfg, fl_cfg, "mnist",
                            strategies=("contextual", "gossip"),
+                           aggregators=("fedavg", "fedadam"),
                            mesh=make_grid_mesh())  # omit mesh on one device
     result = eng.run_grid(strategies=("contextual", "gossip"),
                           seeds=(0, 1), scenarios=("ring", "rush_hour"),
                           rounds=40, eval_every=5)
-    result.records(strategy="contextual", seed=0, scenario="ring")
+    result.records(strategy="contextual", seed=0, scenario="ring",
+                   aggregator="fedadam")
 
 Scenario names resolve through ``repro.core.scenarios``; passing explicit
 ``TrafficConfig`` objects also works as long as their static geometry
@@ -81,6 +85,7 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
+from repro.fl.aggregators import validate_aggregators
 from repro.core.scenarios import (
     ScenarioParams,
     data_signature,
@@ -126,20 +131,42 @@ def _recluster_flags(rounds: int, recluster_every: int) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class GridResult:
-    """Stacked metrics for a flat experiment grid."""
+    """Stacked metrics for a flat experiment grid.
+
+    ``runs`` rows are (strategy, aggregator, seed, scenario name); the
+    lookup helpers keep ``aggregator`` as a defaulted trailing keyword —
+    omitted, it resolves to this result's SOLE aggregator, so
+    single-aggregator grids (whatever the rule) read as before, and a
+    multi-aggregator lookup that omits it fails with the axis values
+    rather than an opaque ``list.index`` miss.
+    """
 
     metrics: RoundMetrics  # leaves (G, rounds)
-    runs: List[Tuple[str, int, str]]  # (strategy, seed, scenario name) per row
+    runs: List[Tuple[str, str, int, str]]  # (strategy, aggregator, seed, scenario)
 
-    def index_of(self, strategy: str, seed: int, scenario: str) -> int:
-        return self.runs.index((strategy, seed, scenario))
+    def _resolve_aggregator(self, aggregator: Optional[str]) -> str:
+        if aggregator is not None:
+            return aggregator
+        axis = sorted({r[1] for r in self.runs})
+        if len(axis) != 1:
+            raise ValueError(
+                "this grid swept multiple aggregators — pass aggregator= "
+                f"explicitly (one of: {', '.join(axis)})"
+            )
+        return axis[0]
 
-    def records(self, strategy: str, seed: int, scenario: str) -> List[RoundRecord]:
-        g = self.index_of(strategy, seed, scenario)
+    def index_of(self, strategy: str, seed: int, scenario: str,
+                 aggregator: Optional[str] = None) -> int:
+        aggregator = self._resolve_aggregator(aggregator)
+        return self.runs.index((strategy, aggregator, seed, scenario))
+
+    def records(self, strategy: str, seed: int, scenario: str,
+                aggregator: Optional[str] = None) -> List[RoundRecord]:
+        g = self.index_of(strategy, seed, scenario, aggregator)
         one = jax.tree_util.tree_map(lambda x: x[g], self.metrics)
         return metrics_to_records(one)
 
-    def final_accuracy(self) -> Dict[Tuple[str, int, str], float]:
+    def final_accuracy(self) -> Dict[Tuple[str, str, int, str], float]:
         acc = np.asarray(self.metrics.test_acc)
         return {run: float(acc[g, -1]) for g, run in enumerate(self.runs)}
 
@@ -152,6 +179,9 @@ class ExperimentEngine:
     axis over them (``launch.mesh.make_grid_mesh()`` builds the all-device
     1-D mesh).  ``partition_on_device``: build client shards inside the
     compiled program (default) instead of stacking host copies.
+    ``aggregators``: the server-optimizer registry slice this engine
+    compiles (``fl.aggregators.AGGREGATOR_ORDER`` names); the default
+    single-``fedavg`` registry traces the frozen pre-registry path.
 
     ``last_data_plan`` (after a sharded ``run_grid``): the shard-local
     RoundData placement — ``{"total_rows", "rows_per_shard", "n_shards"}``
@@ -169,12 +199,14 @@ class ExperimentEngine:
         mesh=None,
         partition_on_device: bool = True,
         init_on_device: bool = True,
+        aggregators: Sequence[str] = ("fedavg",),
     ):
         if num_clients is not None:
             fl_cfg = dataclasses.replace(fl_cfg, num_clients=num_clients)
         self.fl = fl_cfg
         self.dataset = dataset
         self.strategies = tuple(strategies)
+        self.aggregators = validate_aggregators(aggregators)
         self.api = build_model(model_cfg)
         self.cohort_size = cohort_size_for(fl_cfg, self.strategies)
         self.mesh = mesh
@@ -204,6 +236,7 @@ class ExperimentEngine:
             self._round_step = make_round_step(
                 self.api.loss, self.fl, self.cohort_size, self.model_bytes,
                 self.param_spec, strategies=self.strategies,
+                aggregators=self.aggregators,
             )
             self._warmup = make_warmup(self.api.loss, self.fl, self.param_spec)
         return self._round_step
@@ -277,17 +310,19 @@ class ExperimentEngine:
         recluster flag streams replicate."""
         rep = PartitionSpec()
 
-        def fn(states, datas, scns, strat_idx, data_idx, flags):
-            def local(states, datas, scns, strat_idx, data_idx, flags):
-                return self._grid(states, datas, scns, strat_idx, data_idx, flags)
+        def fn(states, datas, scns, strat_idx, agg_idx, data_idx, flags):
+            def local(states, datas, scns, strat_idx, agg_idx, data_idx, flags):
+                return self._grid(
+                    states, datas, scns, strat_idx, agg_idx, data_idx, flags
+                )
 
             return shard_map(
                 local,
                 mesh=self.mesh,
-                in_specs=(row, data_spec, row, row, row, rep),
+                in_specs=(row, data_spec, row, row, row, row, rep),
                 out_specs=(row, row),
                 **SHARD_MAP_NO_CHECK,
-            )(states, datas, scns, strat_idx, data_idx, flags)
+            )(states, datas, scns, strat_idx, agg_idx, data_idx, flags)
 
         return jax.jit(fn, donate_argnums=(0,))
 
@@ -335,7 +370,7 @@ class ExperimentEngine:
             )[0]
         )(states, scns)
 
-    def _grid(self, states, datas, scns, strat_idx, data_idx, flags,
+    def _grid(self, states, datas, scns, strat_idx, agg_idx, data_idx, flags,
               warm: bool = True):
         # ``datas`` is unbatched (in_axes=None): rows differing only by
         # scenario share byte-identical client shards + test sets (the
@@ -349,7 +384,7 @@ class ExperimentEngine:
         datas = self._materialize(datas)
         step = self._round_step
 
-        def one(state, scn, si, di):
+        def one(state, scn, si, ai, di):
             if warm:
                 state = self._warmup(state, datas, di)
 
@@ -358,12 +393,14 @@ class ExperimentEngine:
                 # tag the scan body so hlo_analysis can trip-weight the
                 # per-round ops (the ``round-step`` target)
                 with jax.named_scope("round"):
-                    return step(s, scn, si, datas, do_eval, do_recluster, di)
+                    return step(s, scn, si, ai, datas, do_eval, do_recluster, di)
 
             final, metrics = jax.lax.scan(body, state, flags)
             return final, metrics
 
-        return jax.vmap(one, in_axes=(0, 0, 0, 0))(states, scns, strat_idx, data_idx)
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, 0))(
+            states, scns, strat_idx, agg_idx, data_idx
+        )
 
     def run_grid(
         self,
@@ -371,9 +408,11 @@ class ExperimentEngine:
         scenarios: Sequence[ScenarioLike],
         rounds: int,
         strategies: Optional[Sequence[str]] = None,
+        aggregators: Optional[Sequence[str]] = None,
         eval_every: int = 1,
     ) -> GridResult:
-        """Run the full (strategy x seed x scenario) grid as one program."""
+        """Run the (strategy x aggregator x seed x scenario) grid as one
+        program."""
         strategies = tuple(strategies) if strategies is not None else self.strategies
         unknown = set(strategies) - set(self.strategies)
         if unknown:
@@ -381,10 +420,20 @@ class ExperimentEngine:
                 f"strategies {sorted(unknown)} not covered by this engine's "
                 f"cohort size; construct it with strategies={sorted(set(self.strategies) | unknown)}"
             )
-        runs = list(itertools.product(strategies, seeds, scenarios))
-        states, scn_list, sidx = [], [], []
+        aggregators = (
+            tuple(aggregators) if aggregators is not None else self.aggregators
+        )
+        unknown = set(aggregators) - set(self.aggregators)
+        if unknown:
+            raise ValueError(
+                f"aggregators {sorted(unknown)} not in this engine's compiled "
+                f"registry; construct it with "
+                f"aggregators={sorted(set(self.aggregators) | unknown)}"
+            )
+        runs = list(itertools.product(strategies, aggregators, seeds, scenarios))
+        states, scn_list, sidx, aidx = [], [], [], []
         data_rows, data_row_of, didx = [], {}, []
-        for strategy, seed, scenario in runs:
+        for strategy, aggregator, seed, scenario in runs:
             tc = self._traffic_of(scenario)
             if self.init_on_device:
                 # pure key stacking: model init + twin seeding + client
@@ -399,9 +448,11 @@ class ExperimentEngine:
             states.append(st)
             scn_list.append(scn)
             sidx.append(si)
+            aidx.append(self.aggregators.index(aggregator))
             # client shards/test set depend on (strategy, seed) plus the
-            # spawn-layout signature (platoon regroups regions); keep one
-            # stacked row per unique triple (see _grid)
+            # spawn-layout signature (platoon regroups regions) — NEVER the
+            # aggregator (a server-side rule over the same data streams);
+            # keep one stacked row per unique triple (see _grid)
             pair = (strategy, seed, data_signature(tc))
             if pair not in data_row_of:
                 data_row_of[pair] = len(data_rows)
@@ -414,6 +465,7 @@ class ExperimentEngine:
             states = jax.tree_util.tree_map(stack, *states)
         scns = stack_scenarios(scn_list)
         strat_idx = jnp.asarray(sidx, jnp.int32)
+        agg_idx = jnp.asarray(aidx, jnp.int32)
         data_idx = np.asarray(didx, np.int32)
         flags = (_eval_flags(rounds, eval_every),
                  _recluster_flags(rounds, self.fl.recluster_every))
@@ -440,7 +492,8 @@ class ExperimentEngine:
                 take = lambda x: x[pad_idx]
                 states = jax.tree_util.tree_map(take, states)
                 scns = jax.tree_util.tree_map(take, scns)
-                strat_idx, data_idx = strat_idx[pad_idx], data_idx[pad_idx]
+                strat_idx, agg_idx = strat_idx[pad_idx], agg_idx[pad_idx]
+                data_idx = data_idx[pad_idx]
             spec = resolve_pspec(("grid",), (G + pad,), self.mesh, TRAIN_RULES)
             if len(spec) and spec[0] is not None:
                 # shard-local RoundData: ship each device only the dedup
@@ -461,19 +514,19 @@ class ExperimentEngine:
                         PartitionSpec(spec[0]), PartitionSpec(dspec[0])
                     )
                 _, metrics = self._sharded_fn(
-                    states, datas, scns, strat_idx,
+                    states, datas, scns, strat_idx, agg_idx,
                     jnp.asarray(local_idx), flags,
                 )
                 metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
             else:  # divisibility fallback (should not happen after padding)
                 _, metrics = self._grid_fn(
-                    states, stack_rows(data_rows), scns, strat_idx,
+                    states, stack_rows(data_rows), scns, strat_idx, agg_idx,
                     jnp.asarray(data_idx), flags,
                 )
                 metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
         else:
             _, metrics = self._grid_fn(
-                states, stack_rows(data_rows), scns, strat_idx,
+                states, stack_rows(data_rows), scns, strat_idx, agg_idx,
                 jnp.asarray(data_idx), flags,
             )
         scenarios = list(scenarios)
@@ -481,7 +534,8 @@ class ExperimentEngine:
         def _label(sc):
             return sc if isinstance(sc, str) else f"custom-{scenarios.index(sc)}"
 
-        labels = [(strategy, seed, _label(sc)) for strategy, seed, sc in runs]
+        labels = [(strategy, aggregator, seed, _label(sc))
+                  for strategy, aggregator, seed, sc in runs]
         return GridResult(metrics=metrics, runs=labels)
 
     def run_single(
@@ -491,11 +545,14 @@ class ExperimentEngine:
         scenario: ScenarioLike = "ring",
         rounds: int = 40,
         eval_every: int = 1,
+        aggregator: Optional[str] = None,
     ) -> List[RoundRecord]:
         """One experiment through the same scan program (grid of size 1)."""
         result = self.run_grid(
             seeds=(seed,), scenarios=(scenario,), rounds=rounds,
-            strategies=(strategy,), eval_every=eval_every,
+            strategies=(strategy,),
+            aggregators=(aggregator or self.aggregators[0],),
+            eval_every=eval_every,
         )
         return metrics_to_records(
             jax.tree_util.tree_map(lambda x: x[0], result.metrics)

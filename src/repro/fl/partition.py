@@ -111,6 +111,19 @@ def client_images(key, dataset: str, labels: jax.Array) -> jax.Array:
     return protos[labels] + noise
 
 
+def client_sample_counts(labels: jax.Array) -> jax.Array:
+    """(C,) f32 usable-sample counts straight from the shard label map.
+
+    Negative labels mark padding slots (none of the current partitioners
+    emit any, so counts == ``samples_per_client`` everywhere today and
+    FedAvg weighting is bitwise-unchanged); a ragged partitioner only has
+    to pad with ``-1`` for its clients to be weighted by what they
+    actually hold.  Rides ``RoundData.counts`` so the round core never
+    reads the config constant.
+    """
+    return jnp.sum(labels >= 0, axis=1).astype(jnp.float32)
+
+
 def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
     """Returns (images (C,n,H,W,ch), labels (C,n)) for all C clients.
 

@@ -8,7 +8,8 @@ four pipeline stages (fusion -> prediction -> clustering -> election), the
 cohort training, the realized-latency round economics and the FedAvg update
 are folded into a single pure function
 
-    round_step(state, scn, strategy_idx, data, do_eval, ...) -> (state, metrics)
+    round_step(state, scn, strategy_idx, aggregator_idx, data, do_eval, ...)
+        -> (state, metrics)
 
 with *fixed-size, mask-based* selection (no data-dependent shapes) and
 ``jnp.where``/``lax.cond`` branching, so a whole experiment is one
@@ -33,6 +34,28 @@ rather than K pytree AXPYs — and the carried global model IS that flat
 (P,) fp32 vector: the scan carry is a single buffer the jit donates
 (``fl.engine``), the FedAvg delta lands as one AXPY, and the pytree view
 is materialized only where a consumer needs it (trainer, eval).
+
+The server UPDATE RULE is a registry axis (``fl.aggregators``,
+``AGGREGATOR_ORDER``): ``round_step`` takes a traced ``aggregator_idx``
+alongside ``strategy_idx``, the first/second-moment server state rides the
+carry as two more flat (P,) vectors (``RoundState.opt_m`` / ``opt_v``),
+and the reduce + moment rules + parameter step run as ONE fused P-blocked
+pass (``kernels.ops.server_update_auto``).  FedAvg weights come from the
+per-client sample counts carried in ``RoundData.counts`` (bitwise-equal to
+the old ``fl.samples_per_client`` constant while partitioners fill every
+slot); the ``stale`` rule replaces the hard deadline drop with a
+staleness discount of the realized per-client round time
+(``aggregators.staleness_scale``) — the rule itself only redirects the
+model update, never the round physics, so round ECONOMICS (duration,
+deadline payments, selection) stay identical across aggregator lanes
+until the deadline rule's re-clustering first consumes sketches computed
+from the diverged models (cluster-dependent strategies may then elect
+different cohorts; cluster-free strategies like gossip/greedy/network
+keep identical economics indefinitely).  A single-``fedavg`` registry
+with ``fedprox_mu=0``
+traces the pre-registry reduce+AXPY path line for line, so that branch
+stays bitwise-frozen (tests/test_aggregators.py holds it against the
+general switch path in both dispatch modes).
 
 Shape conventions (docs/architecture.md has the full walkthrough):
 
@@ -70,10 +93,23 @@ from repro.core.clustering import (
 )
 from repro.core.trajectory import predict_rttg
 from repro.core.twin import advance_twin, init_twin_state
+from repro.fl.aggregators import (
+    AGGREGATOR_ORDER,
+    STALE_IDX,
+    init_opt_vectors,
+    server_hp,
+    staleness_scale,
+    validate_aggregators,
+)
 from repro.fl.client import make_local_trainer
-from repro.fl.partition import make_test_set, partition_clients
+from repro.fl.partition import client_sample_counts, make_test_set, partition_clients
 from repro.fl.server import apply_delta_flat, normalized_weights
-from repro.kernels.ops import fedavg_reduce_auto, pick_block_p, rttg_latency_auto
+from repro.kernels.ops import (
+    fedavg_reduce_auto,
+    pick_block_p,
+    rttg_latency_auto,
+    server_update_auto,
+)
 from repro.sharding import split_params
 from repro.utils import flatten_to_vector, fold_in_str, unflatten_from_vector
 
@@ -90,12 +126,17 @@ class RoundState(NamedTuple):
     """Everything a round mutates, as one device-resident pytree.
 
     ``params`` is the FLAT (P,) fp32 model vector (see module docstring);
-    ``sketch_sign`` is a per-experiment constant (the Rademacher projection
-    signs) carried here so the rounds scan never re-draws a P-long
-    Bernoulli — XLA cannot hoist it out of the scan body on its own.
+    ``opt_m`` / ``opt_v`` the server optimizer's first/second-moment
+    vectors in the same flat layout (zeros at init; plain fedavg carries
+    them untouched); ``sketch_sign`` is a per-experiment constant (the
+    Rademacher projection signs) carried here so the rounds scan never
+    re-draws a P-long Bernoulli — XLA cannot hoist it out of the scan
+    body on its own.
     """
 
     params: jax.Array  # (P,) flat fp32 global model vector
+    opt_m: jax.Array  # (P,) server first-moment state (fl.aggregators)
+    opt_v: jax.Array  # (P,) server second-moment state
     twin: TwinState  # ground-truth traffic state
     sketches: jax.Array  # (N, sketch_dim) update sketches (stage 3)
     sketch_age: jax.Array  # (N,) rounds since last report
@@ -107,10 +148,16 @@ class RoundState(NamedTuple):
 
 
 class RoundData(NamedTuple):
-    """Per-experiment constants: client shards + global test set."""
+    """Per-experiment constants: client shards + global test set.
+
+    ``counts`` carries each client's usable-sample count: FedAvg weights
+    read THIS (not the ``fl.samples_per_client`` constant), so a
+    partitioner that fills clients unevenly weights them honestly.
+    """
 
     images: jax.Array  # (N, n, H, W, C)
     labels: jax.Array  # (N, n)
+    counts: jax.Array  # (N,) f32 per-client sample counts (FedAvg weights)
     test_x: jax.Array
     test_y: jax.Array
 
@@ -232,8 +279,11 @@ def init_state_traced(
     twin_state = init_twin_state(scn, twin_init_key(key))
     regions = regions_of(twin_state.pos, scn)
     N = fl.num_clients
+    opt_m, opt_v = init_opt_vectors(params_vec)
     state = RoundState(
         params=params_vec,
+        opt_m=opt_m,
+        opt_v=opt_v,
         twin=twin_state,
         sketches=jnp.zeros((N, fl.sketch_dim), jnp.float32),
         sketch_age=jnp.full((N,), jnp.inf, jnp.float32),
@@ -294,7 +344,7 @@ def make_round_data(
     """
     images, labels = partition_clients(key, dataset, fl, regions)
     test_x, test_y = make_test_set(key, dataset)
-    return RoundData(images, labels, test_x, test_y)
+    return RoundData(images, labels, client_sample_counts(labels), test_x, test_y)
 
 
 def init_experiment(
@@ -345,22 +395,36 @@ def make_warmup(loss_fn, fl: FLConfig, param_spec):
 
 def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                     param_spec, strategies: Sequence[str] = STRATEGY_ORDER,
-                    fused: bool = True):
+                    fused: bool = True,
+                    aggregators: Sequence[str] = ("fedavg",)):
     """Build the pure round transition for a fixed FL config.
 
     Static arguments select the compiled program; ``scn`` (ScenarioParams or
-    TrafficConfig), ``strategy_idx``, ``do_eval`` and the optional
-    ``do_recluster`` / ``data_idx`` are traced so the same program serves
-    the whole grid.  ``strategy_idx`` indexes ``strategies`` (not the
-    global order): a vmapped switch executes every branch for every lane,
-    so carrying only the grid's strategies matters.
+    TrafficConfig), ``strategy_idx``, ``aggregator_idx``, ``do_eval`` and
+    the optional ``do_recluster`` / ``data_idx`` are traced so the same
+    program serves the whole grid.  ``strategy_idx`` indexes ``strategies``
+    (not the global order): a vmapped switch executes every branch for
+    every lane, so carrying only the grid's strategies matters.
+    ``aggregator_idx`` indexes ``aggregators`` the same way (the registry
+    in ``fl.aggregators``); the special single-rule ``("fedavg",)``
+    registry — the default — traces the pre-registry reduce+AXPY path
+    verbatim, keeping it bitwise-frozen.
 
     ``fused`` selects the one-sweep ``rttg_latency`` geometry path
     (default) vs the legacy composition — bitwise-identical by contract.
     """
     strategies = tuple(strategies)
+    aggregators = validate_aggregators(aggregators)
+    # local aggregator index -> global AGGREGATOR_ORDER index (the fused
+    # server_update pass and the STALE_IDX test both speak global)
+    agg_global = jnp.asarray(
+        [AGGREGATOR_ORDER.index(a) for a in aggregators], jnp.int32
+    )
+    plain_fedavg = aggregators == ("fedavg",)
+    hp = server_hp(fl)
     trainer = make_local_trainer(
-        loss_fn, fl.learning_rate, fl.local_epochs, fl.batch_size
+        loss_fn, fl.learning_rate, fl.local_epochs, fl.batch_size,
+        mu=fl.fedprox_mu,
     )
     n_select = fl.n_select
     N, K = fl.num_clients, cohort_size
@@ -440,8 +504,8 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             strategy_idx, branches, k, connected, lat_pred, clusters
         )
 
-    def round_step(state: RoundState, scn, strategy_idx, data: RoundData,
-                   do_eval, do_recluster=None, data_idx=None):
+    def round_step(state: RoundState, scn, strategy_idx, aggregator_idx,
+                   data: RoundData, do_eval, do_recluster=None, data_idx=None):
         rk = jax.random.fold_in(state.key, state.round)
 
         # ---- stages 1+2: fuse CAM/CPM, predict, price the topology -----
@@ -494,12 +558,44 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             n_selected > 0, dur_core + fl.server_agg_s, timeout
         )
 
-        # ---- FedAvg over deadline survivors (flat Pallas reduction) ----
-        w = normalized_weights(ok, jnp.full((K,), fl.samples_per_client, jnp.float32))
-        delta = fedavg_reduce_auto(vecs, w, block_p=pick_block_p(K, P))
-        params_vec = jnp.where(
-            ok_any, apply_delta_flat(state.params, delta), state.params
-        )
+        # ---- server update over deadline survivors (one fused flat pass)
+        # weights come from the per-client sample counts the data row
+        # carries (equal to fl.samples_per_client while every slot fills)
+        counts_k = _row(data.counts, data_idx)[idx_c]
+        bp = pick_block_p(K, P)
+        if plain_fedavg:
+            # THE pre-registry path, traced verbatim: plain FedAvg, server
+            # moment vectors ride the carry untouched
+            w = normalized_weights(ok, counts_k)
+            delta = fedavg_reduce_auto(vecs, w, block_p=bp)
+            params_vec = jnp.where(
+                ok_any, apply_delta_flat(state.params, delta), state.params
+            )
+            opt_m, opt_v = state.opt_m, state.opt_v
+        else:
+            gidx = agg_global[aggregator_idx]
+            is_stale = gidx == STALE_IDX
+            # stale rule: deadline-missing stragglers keep a discounted
+            # weight from their REALIZED round time instead of dropping to
+            # zero; survivors and every other rule keep the strict weights
+            # bitwise (jnp.where passes the untaken side through untouched)
+            w_strict = normalized_weights(ok, counts_k)
+            disc = jnp.where(ok, 1.0, staleness_scale(per_slot, timeout))
+            w_stale = normalized_weights(slot_valid, counts_k * disc)
+            w = jnp.where(is_stale, w_stale, w_strict)
+            # under stale ANY selected client contributes an update; round
+            # economics (duration, base twin, metrics) keep the strict
+            # deadline semantics so aggregator lanes stay comparable (see
+            # the module docstring for how far that identity extends)
+            upd_any = jnp.where(is_stale, n_selected > 0, ok_any)
+            new_p, new_m, new_v = server_update_auto(
+                vecs, w, state.params, state.opt_m, state.opt_v, gidx,
+                state.round, eta=hp.eta, beta1=hp.beta1, beta2=hp.beta2,
+                tau=hp.tau, block_p=bp,
+            )
+            params_vec = jnp.where(upd_any, new_p, state.params)
+            opt_m = jnp.where(upd_any, new_m, state.opt_m)
+            opt_v = jnp.where(upd_any, new_v, state.opt_v)
 
         # ---- deadline rule: survivors report sketches ------------------
         sks = jax.vmap(
@@ -561,6 +657,8 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         )
         new_state = state._replace(
             params=params_vec,
+            opt_m=opt_m,
+            opt_v=opt_v,
             twin=twin,
             sketches=sketches,
             sketch_age=sketch_age,

@@ -1,9 +1,15 @@
-"""Server-side FedAvg aggregation.
+"""Server-side FedAvg aggregation (the plain-AXPY primitives).
 
 ``fedavg_aggregate`` applies the masked weighted average of client updates
 to the global model.  The contraction itself is ``tree_weighted_sum``
 (pure jnp) or the Pallas ``fedavg_reduce`` kernel on the flat layout —
 both validated against each other in tests/test_kernels.py.
+
+The full server-optimizer registry (FedAvgM / FedAdam / FedYogi /
+staleness-aware aggregation) lives in ``repro.fl.aggregators``; the round
+core fuses reduce + rule through ``kernels.ops.server_update_auto`` and
+falls back to the primitives here only on the frozen single-``fedavg``
+path.
 """
 from __future__ import annotations
 

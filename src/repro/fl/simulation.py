@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.config import FLConfig, ModelConfig, TrafficConfig
 from repro.core.scenarios import scenario_params
+from repro.fl.aggregators import validate_aggregators
 from repro.fl.rounds import (
     RoundRecord,
     cohort_size_for,
@@ -52,6 +53,9 @@ class FLSimulation:
         key: jax.Array,
     ):
         self.fl, self.traffic, self.strategy = fl_cfg, traffic_cfg, strategy
+        # server aggregation rule: FLConfig.aggregator (fl/aggregators.py
+        # registry; grids sweep the axis through the engine instead)
+        self.aggregator = validate_aggregators((fl_cfg.aggregator,))[0]
         self.api = build_model(model_cfg)
         self.state, self.data = init_experiment(
             self.api, fl_cfg, traffic_cfg, dataset, strategy, key
@@ -67,6 +71,7 @@ class FLSimulation:
         self.model_bytes = float(tree_bytes(param_tree))
         self._scn = scenario_params(traffic_cfg)
         self._strategy_idx = jnp.zeros((), jnp.int32)  # sole branch
+        self._agg_idx = jnp.zeros((), jnp.int32)  # sole registry entry
         # donate the carried state: one buffer per experiment, updated in
         # place round over round (mirrors the engine's donated scan carry)
         self._step = jax.jit(
@@ -77,6 +82,7 @@ class FLSimulation:
                 self.model_bytes,
                 self.param_spec,
                 strategies=(strategy,),
+                aggregators=(self.aggregator,),
             ),
             donate_argnums=(0,),
         )
@@ -116,7 +122,8 @@ class FLSimulation:
     def run_round(self) -> RoundRecord:
         """One round = one jitted call to the shared pure core + host sync."""
         self.state, metrics = self._step(
-            self.state, self._scn, self._strategy_idx, self.data, True
+            self.state, self._scn, self._strategy_idx, self._agg_idx,
+            self.data, True
         )
         one = jax.tree_util.tree_map(lambda x: x[None], metrics)
         return metrics_to_records(one)[0]

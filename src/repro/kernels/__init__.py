@@ -2,6 +2,8 @@
 
   pairwise_cosine — stage-3 clustering Gram matrix (MXU, 128x128 tiles)
   fedavg_reduce   — stage-4 aggregation sweep (memory-bound, P-tiled)
+  server_update   — fused server optimizer pass (weighted reduce -> moment
+                    rules -> parameter step, one P-blocked sweep)
   rttg_latency    — fused per-round geometry chain (predict -> RSU attach
                     -> latency -> connectivity, one N-block x R pass)
   swa_decode      — sliding-window GQA decode attention (online softmax)
@@ -18,6 +20,8 @@ from repro.kernels.ops import (
     pick_block_p,
     rttg_latency,
     rttg_latency_auto,
+    server_update,
+    server_update_auto,
     ssd_scan,
     ssd_scan_auto,
     swa_decode,
@@ -29,12 +33,14 @@ __all__ = [
     "pairwise_cosine",
     "fedavg_reduce",
     "rttg_latency",
+    "server_update",
     "swa_decode",
     "ssd_scan",
     "ssd_scan_auto",
     "pairwise_cosine_auto",
     "fedavg_reduce_auto",
     "rttg_latency_auto",
+    "server_update_auto",
     "swa_decode_auto",
     "pick_block_p",
     "ref",

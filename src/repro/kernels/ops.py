@@ -34,6 +34,7 @@ from repro.kernels import ref
 from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.pairwise_cosine import pairwise_cosine
 from repro.kernels.rttg_latency import rttg_latency
+from repro.kernels.server_update import server_update
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.swa_decode import swa_decode
 
@@ -41,11 +42,13 @@ __all__ = [
     "pairwise_cosine",
     "fedavg_reduce",
     "rttg_latency",
+    "server_update",
     "swa_decode",
     "ssd_scan",
     "pairwise_cosine_auto",
     "fedavg_reduce_auto",
     "rttg_latency_auto",
+    "server_update_auto",
     "swa_decode_auto",
     "ssd_scan_auto",
     "pick_block_p",
@@ -112,6 +115,25 @@ def fedavg_reduce_auto(updates, weights, **kw):
         return ref.fedavg_reduce(updates, weights)
     kw.setdefault("block_p", pick_block_p(*updates.shape))
     return fedavg_reduce(updates, weights, interpret=mode == "interpret", **kw)
+
+
+def server_update_auto(updates, weights, params, m, v, agg_idx, rnd, *,
+                       eta, beta1, beta2, tau, **kw):
+    """Fused server update (reduce + moments + AXPY) with backend dispatch.
+
+    Same tile policy as ``fedavg_reduce_auto`` — the (K, block_p) update
+    tile dominates the working set; the extra params/m/v rows are
+    (1, block_p) each and stay inside the 8x headroom of the budget.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.server_update(updates, weights, params, m, v, agg_idx,
+                                 rnd, eta=eta, beta1=beta1, beta2=beta2,
+                                 tau=tau)
+    kw.setdefault("block_p", pick_block_p(*updates.shape))
+    return server_update(updates, weights, params, m, v, agg_idx, rnd,
+                         eta=eta, beta1=beta1, beta2=beta2, tau=tau,
+                         interpret=mode == "interpret", **kw)
 
 
 def rttg_latency_auto(pos, speed, accel, t, model_bytes, forced, cfg, *,

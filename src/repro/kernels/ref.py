@@ -24,6 +24,29 @@ def fedavg_reduce(updates: jax.Array, weights: jax.Array) -> jax.Array:
     )
 
 
+def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
+                  eta=1.0, beta1=0.9, beta2=0.99, tau=1e-3):
+    """Fused server update oracle -> (params', m', v'), all (P,) fp32.
+
+    THE unfused composition: ``fedavg_reduce`` (the weighted cohort
+    contraction above) followed by ``fl.aggregators.apply_rule`` — the
+    registry's ``lax.switch`` over the per-rule moment/step expressions.
+    The Pallas kernel's bitwise contract is against this function — which
+    is also what ``*_auto`` dispatch runs on non-TPU backends, and whose
+    ``fedavg`` branch is expression-for-expression the pre-registry round
+    path (reduce + one AXPY), keeping that branch bitwise-frozen.
+    """
+    from repro.fl.aggregators import ServerHP, apply_rule
+
+    delta = fedavg_reduce(updates, weights)
+    hp = ServerHP(eta=eta, beta1=beta1, beta2=beta2, tau=tau)
+    (m2, v2), p2 = apply_rule(
+        agg_idx, (m.astype(jnp.float32), v.astype(jnp.float32)),
+        params.astype(jnp.float32), delta, rnd, hp,
+    )
+    return p2, m2, v2
+
+
 def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict):
     """(N,) kinematics -> (latency (N,) f32, connected (N,) bool).
 

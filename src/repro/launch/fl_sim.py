@@ -8,9 +8,11 @@
 steady densities (ring / highway / urban_grid), the time-varying
 ``rush_hour`` / ``day_cycle`` schedules, infrastructure-failure
 ``rsu_outage``, convoy-correlated ``platoon`` and compute-tier
-``hetero_fleet`` families (see docs/scenarios.md).  An unknown name fails
-fast with the registered catalog.  Whole (strategy x seed x scenario)
-sweeps should use
+``hetero_fleet`` families (see docs/scenarios.md).  ``--aggregator``
+selects the server optimizer from the ``repro.fl.aggregators`` registry
+(fedavg / fedavgm / fedadam / fedyogi / staleness-discounted ``stale``).
+An unknown name for either fails fast with the registered catalog.
+Whole (strategy x aggregator x seed x scenario) sweeps should use
 ``repro.fl.engine.ExperimentEngine`` directly: it batches the grid into
 one device-resident program and shards it over a mesh when given one.
 """
@@ -28,6 +30,7 @@ from repro.configs import get_config
 from repro.configs.paper_models import PAPER_MODEL_BY_DATASET
 from repro.core.scenarios import SCENARIOS, scenario_config
 from repro.core.selection import STRATEGIES
+from repro.fl.aggregators import AGGREGATOR_ORDER
 from repro.fl.simulation import FLSimulation, time_to_accuracy
 
 
@@ -45,11 +48,17 @@ def run_experiment(
     verbose: bool = False,
     predict_horizon_s: float | None = None,
     scenario: str = "ring",
+    aggregator: str = "fedavg",
 ):
     if scenario not in SCENARIOS:
         raise ValueError(
             f"unknown scenario {scenario!r}; registered catalog: "
             f"{', '.join(sorted(SCENARIOS))} (see docs/scenarios.md to add one)"
+        )
+    if aggregator not in AGGREGATOR_ORDER:
+        raise ValueError(
+            f"unknown aggregator {aggregator!r}; registered catalog: "
+            f"{', '.join(AGGREGATOR_ORDER)} (see repro/fl/aggregators.py)"
         )
     model_cfg = get_config(PAPER_MODEL_BY_DATASET[dataset])
     # paper §IV-A: 3 local epochs on MNIST, 1 on CIFAR-10/SVHN
@@ -61,6 +70,7 @@ def run_experiment(
         classes_per_client=classes_per_client,
         samples_per_client=samples_per_client,
         num_clusters=10,
+        aggregator=aggregator,
         seed=seed,
     )
     tr = scenario_config(scenario, num_vehicles=num_clients)
@@ -72,6 +82,7 @@ def run_experiment(
     return {
         "dataset": dataset,
         "strategy": strategy,
+        "aggregator": aggregator,
         "connection_rate": connection_rate,
         "scenario": scenario,
         "classes_per_client": classes_per_client,
@@ -88,9 +99,10 @@ def main(argv=None):
     ap.add_argument("--strategy", default="contextual", choices=sorted(STRATEGIES))
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--connection-rate", type=float, default=1.0)
-    # no argparse ``choices``: the catalog error below lists the registered
-    # names itself (and stays correct for programmatic run_experiment calls)
+    # no argparse ``choices``: the catalog errors below list the registered
+    # names themselves (and stay correct for programmatic run_experiment calls)
     ap.add_argument("--scenario", default="ring")
+    ap.add_argument("--aggregator", default="fedavg")
     ap.add_argument("--classes-per-client", type=int, default=2)
     ap.add_argument("--num-clients", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -103,12 +115,17 @@ def main(argv=None):
             f"unknown scenario {args.scenario!r}; registered catalog: "
             f"{', '.join(sorted(SCENARIOS))}"
         )
+    if args.aggregator not in AGGREGATOR_ORDER:
+        ap.error(
+            f"unknown aggregator {args.aggregator!r}; registered catalog: "
+            f"{', '.join(AGGREGATOR_ORDER)}"
+        )
 
     result = run_experiment(
         args.dataset, args.strategy, args.rounds, args.connection_rate,
         args.classes_per_client, args.num_clients, args.seed,
         time_budget_s=args.time_budget, verbose=not args.quiet,
-        scenario=args.scenario,
+        scenario=args.scenario, aggregator=args.aggregator,
     )
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

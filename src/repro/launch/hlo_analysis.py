@@ -229,7 +229,9 @@ def round_step_stats(
     flags = (_eval_flags(rounds, rounds), _recluster_flags(rounds, fl.recluster_every))
     lowered = eng._grid_fn.lower(
         jnp.stack(keys), datas, stack_scenarios(scn_list),
-        jnp.asarray(sidx, jnp.int32), jnp.asarray(didx, jnp.int32), flags,
+        jnp.asarray(sidx, jnp.int32),
+        jnp.zeros(len(sidx), jnp.int32),  # aggregator axis: all-fedavg rows
+        jnp.asarray(didx, jnp.int32), flags,
     )
     compiled = lowered.compile()
     stats = parse_hlo(compiled.as_text(), {"round": float(rounds)})

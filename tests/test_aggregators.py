@@ -1,0 +1,252 @@
+"""Server-optimizer registry: fused kernel parity + bitwise-frozen FedAvg.
+
+Three contracts from the aggregator-axis tentpole:
+
+  * the fused ``server_update`` Pallas kernel (interpret mode on CPU)
+    reproduces ``kernels.ref.server_update`` — ``ref.fedavg_reduce``
+    composed with the registry's ``lax.switch`` rules — BIT FOR BIT, for
+    every registered aggregator, across padding-edge shapes
+    (non-multiple-of-block P, K=1 cohorts);
+  * the ``fedavg`` branch with ``fedprox_mu=0`` is bitwise-frozen: a round
+    through the general aggregator switch path equals the single-fedavg
+    legacy path (the pre-registry reduce+AXPY, traced verbatim) — metrics
+    AND every carried state leaf — in BOTH dispatch modes (pure-jnp ref,
+    the off-TPU production path; and interpret, the TPU-geometry guard);
+  * rule semantics: the moment updates match a hand-written numpy oracle,
+    ``stale`` reweights by the realized-latency discount, and the FedProx
+    proximal term shrinks client drift while ``mu=0`` leaves the local-SGD
+    program untouched.
+
+Tier-1 like the other kernel parity suites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.aggregators import (
+    AGGREGATOR_ORDER,
+    STALE_IDX,
+    ServerHP,
+    apply_rule,
+    staleness_scale,
+    validate_aggregators,
+)
+from repro.kernels import ref, server_update
+
+pytestmark = pytest.mark.tier1
+
+
+def _operands(k, p, seed=0):
+    ks = jax.random.split(jax.random.key(seed * 7919 + k * 31 + p), 5)
+    u = jax.random.normal(ks[0], (k, p), jnp.float32)
+    w = jax.random.uniform(ks[1], (k,))
+    w = w / w.sum()
+    params = jax.random.normal(ks[2], (p,), jnp.float32)
+    m = 0.1 * jax.random.normal(ks[3], (p,), jnp.float32)
+    v = jnp.abs(0.01 * jax.random.normal(ks[4], (p,), jnp.float32))
+    return u, w, params, m, v
+
+
+# shapes deliberately straddle the BlockSpec tile boundaries: K=1
+# degenerate cohorts, P one off either side of the block, exact multiples
+# (which must not gain a pad block), and the engine's historical hot shapes
+_EDGE_SHAPES = [
+    (1, 2047, 2048), (1, 130000, 8192), (5, 2047, 2048), (5, 2049, 2048),
+    (5, 4096, 2048), (3, 130000, 8192), (2, 8192, 2048), (7, 513, 256),
+    (16, 5000, 1024), (100, 38656, 4096),
+]
+
+
+@pytest.mark.parametrize("agg", range(len(AGGREGATOR_ORDER)))
+@pytest.mark.parametrize("k,p,bp", _EDGE_SHAPES)
+def test_server_update_kernel_bitwise_vs_ref(agg, k, p, bp):
+    """Interpret-mode kernel == reduce+switch composition, bit for bit,
+    for every registered rule across the padding edges."""
+    u, w, params, m, v = _operands(k, p)
+    ai, rnd = jnp.int32(agg), jnp.int32(3)
+    got = server_update(u, w, params, m, v, ai, rnd, block_p=bp,
+                        interpret=True)
+    # pass operands as arguments (not closures): baked jit constants fold
+    # a ulp differently than the traced path (see test_round_fused)
+    want = jax.jit(
+        lambda *a: ref.server_update(*a)
+    )(u, w, params, m, v, ai, rnd)
+    for name, a, b in zip(("params", "m", "v"), got, want):
+        assert a.shape == (p,) and a.dtype == jnp.float32
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{AGGREGATOR_ORDER[agg]}/{name}",
+        )
+
+
+def test_server_update_fedavg_branch_is_the_pre_registry_math():
+    """agg=fedavg must reproduce delta=fedavg_reduce; params+delta with the
+    moment vectors untouched — the frozen pre-registry server step."""
+    u, w, params, m, v = _operands(6, 5000)
+    p2, m2, v2 = jax.jit(lambda *a: ref.server_update(*a))(
+        u, w, params, m, v, jnp.int32(0), jnp.int32(0)
+    )
+    delta = jax.jit(ref.fedavg_reduce)(u, w)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(params + delta))
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v))
+    # stale's parameter rule is fedavg's (the discount lives in the weights)
+    p4, m4, v4 = jax.jit(lambda *a: ref.server_update(*a))(
+        u, w, params, m, v, jnp.int32(STALE_IDX), jnp.int32(0)
+    )
+    np.testing.assert_array_equal(np.asarray(p4), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(m4), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(v4), np.asarray(v))
+
+
+def test_rule_semantics_match_numpy_oracle():
+    """apply_rule's moment algebra against a hand-written numpy oracle."""
+    hp = ServerHP(eta=0.5, beta1=0.8, beta2=0.9, tau=1e-2)
+    P = 257
+    _, _, params, m, v = _operands(2, P, seed=5)
+    delta = 0.05 * jax.random.normal(jax.random.key(42), (P,), jnp.float32)
+    pn, mn, vn, dn = (np.asarray(x, np.float64) for x in (params, m, v, delta))
+
+    def run(name):
+        (m2, v2), p2 = apply_rule(
+            jnp.int32(AGGREGATOR_ORDER.index(name)), (m, v), params, delta,
+            jnp.int32(1), hp,
+        )
+        return np.asarray(p2), np.asarray(m2), np.asarray(v2)
+
+    p2, m2, v2 = run("fedavgm")
+    np.testing.assert_allclose(m2, 0.8 * mn + dn, rtol=1e-5)
+    np.testing.assert_allclose(p2, pn + 0.5 * (0.8 * mn + dn), rtol=1e-5)
+    np.testing.assert_array_equal(v2, np.asarray(v))
+
+    p2, m2, v2 = run("fedadam")
+    me = 0.8 * mn + 0.2 * dn
+    ve = 0.9 * vn + 0.1 * dn**2
+    np.testing.assert_allclose(m2, me, rtol=1e-5)
+    np.testing.assert_allclose(v2, ve, rtol=1e-5)
+    np.testing.assert_allclose(p2, pn + 0.5 * me / (np.sqrt(ve) + 1e-2),
+                               rtol=1e-5)
+
+    p2, m2, v2 = run("fedyogi")
+    vy = vn - 0.1 * dn**2 * np.sign(vn - dn**2)
+    np.testing.assert_allclose(v2, vy, rtol=1e-5)
+    np.testing.assert_allclose(p2, pn + 0.5 * me / (np.sqrt(vy) + 1e-2),
+                               rtol=1e-5)
+    # yogi's second moment moves additively (bounded by the adam EMA drop)
+    assert not np.allclose(v2, ve)
+
+
+def test_staleness_scale_discount():
+    """1 at zero lateness, monotone decreasing, never zero: a straggler
+    always contributes SOMETHING under the stale rule."""
+    t = jnp.float32(15.0)
+    lat = jnp.asarray([0.0, 7.5, 15.0, 150.0], jnp.float32)
+    s = np.asarray(staleness_scale(lat, t))
+    np.testing.assert_allclose(s, [1.0, 2.0 / 3.0, 0.5, 1.0 / 11.0],
+                               rtol=1e-5)
+    assert np.all(np.diff(s) < 0) and np.all(s > 0)
+
+
+def test_validate_aggregators_catalog_error():
+    assert validate_aggregators(("fedavg", "stale")) == ("fedavg", "stale")
+    with pytest.raises(ValueError) as ei:
+        validate_aggregators(("fedprox",))
+    msg = str(ei.value)
+    for name in AGGREGATOR_ORDER:
+        assert name in msg
+
+
+# ---------------------------------------------------------------------------
+# the round-level bitwise freeze: general switch path == pre-registry path
+# ---------------------------------------------------------------------------
+def _round_env(aggregators, connection_rate=0.7, mu=0.0):
+    from repro.config import FLConfig
+    from repro.configs import get_config
+    from repro.core.scenarios import scenario_config, scenario_params
+    from repro.fl.rounds import (
+        experiment_key, flat_spec_of, init_state_traced, make_round_data,
+        make_round_step,
+    )
+    from repro.models import build_model
+    from repro.sharding import split_params
+    from repro.utils import tree_bytes
+
+    fl = FLConfig(num_clients=10, samples_per_client=32, batch_size=16,
+                  num_clusters=3, local_epochs=1,
+                  connection_rate=connection_rate, fedprox_mu=mu)
+    api = build_model(get_config("fl-mnist-mlp"))
+    init_params = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config("rush_hour", num_vehicles=10)
+    key = experiment_key("mnist", "contextual", 0)
+    state, regions = jax.jit(
+        lambda k: init_state_traced(init_params, fl, tc, k)
+    )(key)
+    data = make_round_data(key, "mnist", fl, regions)
+    spec_tree = jax.eval_shape(init_params, jax.random.key(0))
+    step = jax.jit(make_round_step(
+        api.loss, fl, fl.n_select, float(tree_bytes(spec_tree)),
+        flat_spec_of(spec_tree), ("contextual",), aggregators=aggregators,
+    ))
+    return state, data, scenario_params(tc), step
+
+
+def _assert_rounds_bitwise(aggregators, agg_idx):
+    state, data, scn, step_legacy = _round_env(("fedavg",))
+    _, _, _, step_general = _round_env(aggregators)
+    si = jnp.zeros((), jnp.int32)
+    sl, ml = step_legacy(state, scn, si, si, data, True)
+    sg, mg = step_general(state, scn, si, jnp.int32(agg_idx), data, True)
+    for name in ml._fields:
+        a, b = np.asarray(getattr(ml, name)), np.asarray(getattr(mg, name))
+        assert np.array_equal(a, b, equal_nan=True), name
+    leaves_l = jax.tree_util.tree_leaves_with_path(sl)
+    for (path, a), b in zip(leaves_l, jax.tree_util.tree_leaves(sg)):
+        if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True), (
+            jax.tree_util.keystr(path)
+        )
+
+
+def test_fedavg_lane_bitwise_frozen_ref_dispatch():
+    """THE tentpole guard, production (off-TPU ref) dispatch: a round whose
+    aggregator lane selects fedavg from the FULL registry switch equals
+    the pre-registry single-fedavg path bit for bit — metrics and every
+    carried state leaf (params, moment vectors, sketches, twin, key)."""
+    _assert_rounds_bitwise(AGGREGATOR_ORDER, 0)
+
+
+def test_fedavg_lane_bitwise_frozen_interpret(monkeypatch):
+    """Same freeze under interpret dispatch: the fused server_update
+    kernel's fedavg branch walks the same BlockSpec tiles as the
+    pre-registry fedavg_reduce kernel (pick_block_p geometry shared)."""
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    _assert_rounds_bitwise(AGGREGATOR_ORDER, 0)
+
+
+def test_fedprox_mu_zero_is_static_noop_and_mu_pulls_back():
+    """mu=0 builds the identical local-SGD program (bitwise identical
+    cohort updates); mu>0 shrinks the drift toward the global model."""
+    from repro.fl.client import make_local_trainer
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.sharding import split_params
+
+    api = build_model(get_config("fl-mnist-mlp"))
+    params = split_params(api.init(jax.random.key(0)))[0]
+    k = jax.random.key(7)
+    imgs = jax.random.normal(jax.random.key(1), (3, 32, 28, 28, 1))
+    lbls = jax.random.randint(jax.random.key(2), (3, 32), 0, 10)
+
+    base = make_local_trainer(api.loss, 1e-3, 1, 16)
+    mu0 = make_local_trainer(api.loss, 1e-3, 1, 16, mu=0.0)
+    prox = make_local_trainer(api.loss, 1e-3, 1, 16, mu=50.0)
+    _, v_base = base(params, imgs, lbls, k)
+    _, v_mu0 = mu0(params, imgs, lbls, k)
+    _, v_prox = prox(params, imgs, lbls, k)
+    np.testing.assert_array_equal(np.asarray(v_base), np.asarray(v_mu0))
+    n_base = np.linalg.norm(np.asarray(v_base), axis=1)
+    n_prox = np.linalg.norm(np.asarray(v_prox), axis=1)
+    assert np.all(n_prox < n_base), (n_prox, n_base)
+    assert np.all(np.isfinite(n_prox)) and np.all(n_prox > 0)

@@ -18,20 +18,39 @@ sys.path.insert(0, REPO)
 
 
 def test_engine_throughput_smoke_covers_catalog():
-    """--smoke sweeps every registered scenario in one batched program."""
+    """--smoke sweeps every registered scenario x every registered
+    aggregator in one batched program."""
     from benchmarks import engine_throughput
     from repro.core.scenarios import SCENARIOS
+    from repro.fl.aggregators import AGGREGATOR_ORDER
 
     # the bench grid must track the catalog: a scenario registered but not
     # benched would dodge both tiers
     assert set(engine_throughput.SCENARIOS) == set(SCENARIOS)
 
+    G = len(SCENARIOS) * len(AGGREGATOR_ORDER)
     r = engine_throughput.smoke(num_clients=8, samples=32)
-    assert r["grid"] == len(SCENARIOS)
-    assert r["total_rounds"] == len(SCENARIOS)
+    assert r["grid"] == G
+    assert r["total_rounds"] == G
     accs = list(r["final_acc"].values())
-    assert len(accs) == len(SCENARIOS)
+    assert len(accs) == G
     assert np.all(np.isfinite(accs))
+    assert {k[1] for k in r["final_acc"]} == set(AGGREGATOR_ORDER)
+
+
+def test_engine_throughput_bench_covers_aggregator_registry():
+    """Mirror of the scenario-catalog guard for the server-optimizer axis:
+    the smoke grid must sweep the FULL fl.aggregators registry, and the
+    timed reference grid must record which aggregator axis it ran."""
+    from benchmarks import engine_throughput
+    from repro.fl.aggregators import AGGREGATOR_ORDER
+
+    assert set(engine_throughput.AGGREGATORS) == set(AGGREGATOR_ORDER), (
+        "a registered aggregator is missing from the bench sweep"
+    )
+    # the timed grid's axis must be drawn from the registry too (it stays
+    # single-fedavg so BENCH_engine.json trajectories compare like for like)
+    assert set(engine_throughput.TIMED_AGGREGATORS) <= set(AGGREGATOR_ORDER)
 
 
 def test_engine_throughput_main_smoke_mode():

@@ -257,7 +257,7 @@ def test_mixed_grid_spans_full_catalog():
     assert len(names) >= 8
     eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
     res = eng.run_grid(seeds=(0,), scenarios=names, rounds=2, eval_every=2)
-    assert [r[2] for r in res.runs] == names
+    assert [r[3] for r in res.runs] == names
     st = np.asarray(res.metrics.sim_time)
     assert np.all(np.isfinite(st)) and np.all(np.diff(st, axis=1) > 0)
     assert np.all(np.isfinite(np.asarray(res.metrics.test_acc)[:, -1]))
@@ -265,6 +265,80 @@ def test_mixed_grid_spans_full_catalog():
     for i in range(len(names)):
         for j in range(i + 1, len(names)):
             assert not np.allclose(st[i], st[j]), (names[i], names[j])
+
+
+def test_aggregator_axis_sweeps_in_one_grid():
+    """Tentpole: the server optimizer is a grid axis — every registered
+    aggregator batches into ONE vmapped program, shares round economics
+    (selection/duration are server-rule independent) and genuinely
+    diverges the MODEL trajectory for the moment-based rules."""
+    import dataclasses
+
+    from repro.fl.aggregators import AGGREGATOR_ORDER
+
+    # recluster_every > rounds: contextual selection is cluster-dependent,
+    # and once re-clustering consumes sketches computed from the DIVERGED
+    # models the lanes may elect different cohorts — the economics
+    # identity below holds by construction only up to that boundary
+    fl = dataclasses.replace(FL, recluster_every=10)
+    eng = ExperimentEngine(MLP, fl, "mnist", strategies=("contextual",),
+                           aggregators=AGGREGATOR_ORDER)
+    res = eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=3, eval_every=3)
+    assert [r[1] for r in res.runs] == list(AGGREGATOR_ORDER)
+    m = res.metrics
+    acc = np.asarray(m.test_acc)[:, -1]
+    assert np.all(np.isfinite(acc))
+    # economics identical across aggregator lanes, bit for bit: the rule
+    # only redirects the model update, never the round physics
+    for f in ("sim_time", "duration", "n_selected", "n_succeeded"):
+        v = np.asarray(getattr(m, f))
+        np.testing.assert_array_equal(v, np.broadcast_to(v[:1], v.shape),
+                                      err_msg=f)
+    # the adaptive/momentum rules actually leave the fedavg trajectory
+    i_avg = res.index_of("contextual", 0, "ring", "fedavg")
+    for agg in ("fedavgm", "fedadam", "fedyogi"):
+        i = res.index_of("contextual", 0, "ring", agg)
+        assert acc[i] != acc[i_avg] or not np.allclose(
+            np.asarray(m.test_loss)[i], np.asarray(m.test_loss)[i_avg],
+            equal_nan=True,
+        ), agg
+    # records() round-trips by (strategy, seed, scenario, aggregator)
+    recs = res.records("contextual", 0, "ring", "fedyogi")
+    assert len(recs) == 3 and recs[-1].round == 3
+
+
+def test_engine_rejects_unknown_aggregator():
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+    with pytest.raises(ValueError, match="registered catalog"):
+        ExperimentEngine(MLP, FL, "mnist", aggregators=("fedsgd",))
+    with pytest.raises(ValueError, match="aggregators"):
+        eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=1,
+                     aggregators=("fedadam",))
+
+
+def test_stale_aggregator_discounts_stragglers():
+    """Under CR < 1 the stale rule keeps straggler updates (discounted by
+    realized round time) instead of dropping them: its trajectory leaves
+    fedavg's while the deadline economics stay bitwise-shared (gossip
+    never reads the clusters, so the economics identity is horizon-free
+    here — see the rounds.py module docstring)."""
+    fl = FLConfig(num_clients=12, samples_per_client=64, local_epochs=1,
+                  num_clusters=4, batch_size=32, recluster_every=2,
+                  connection_rate=0.5)
+    eng = ExperimentEngine(MLP, fl, "mnist", strategies=("gossip",),
+                           aggregators=("fedavg", "stale"))
+    res = eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=4, eval_every=2)
+    m = res.metrics
+    np.testing.assert_array_equal(np.asarray(m.duration)[0],
+                                  np.asarray(m.duration)[1])
+    succ = np.asarray(m.n_succeeded)
+    sel = np.asarray(m.n_selected)
+    assert (succ < sel).any(), "CR=0.5 produced no stragglers to discount"
+    acc = np.asarray(m.test_acc)
+    fin = np.isfinite(acc[0])
+    assert not np.allclose(acc[0][fin], acc[1][fin]) or not np.allclose(
+        np.asarray(m.test_loss)[0][fin], np.asarray(m.test_loss)[1][fin]
+    )
 
 
 def test_platoon_semantics():
@@ -433,6 +507,21 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     assert plan["total_rows"] == 4, plan
     assert plan["rows_per_shard"] == 1 < plan["total_rows"], plan
     _close(rs3, rb3)
+    # aggregator axis under shard_map: (1 strategy x 2 aggregators x 2
+    # seeds x 2 scenarios) = 8 rows on 4 shards; aggregator lanes share
+    # their (strategy, seed) dedup data rows, metrics parity row for row
+    kwa = dict(seeds=(0, 1), scenarios=("ring", "rush_hour"), rounds=2,
+               eval_every=2)
+    base_a = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                              aggregators=("fedavg", "fedadam"))
+    sh_a = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                            aggregators=("fedavg", "fedadam"),
+                            mesh=make_grid_mesh())
+    ra, rba = sh_a.run_grid(**kwa), base_a.run_grid(**kwa)
+    assert ra.runs == rba.runs
+    assert sorted({r[1] for r in ra.runs}) == ["fedadam", "fedavg"]
+    assert sh_a.last_data_plan["total_rows"] == 2, sh_a.last_data_plan
+    _close(ra, rba)
     print("SHARDED_GRID_OK")
 """)
 

@@ -119,6 +119,32 @@ def test_fl_sim_cli_unknown_scenario_exits_with_catalog(capsys):
     assert "platoon" in err and "day_cycle" in err
 
 
+def test_fl_sim_unknown_aggregator_lists_catalog():
+    """Satellite: --aggregator mirrors --scenario — unknown names error
+    with the registered registry (CLI and programmatic entry points)."""
+    from repro.fl.aggregators import AGGREGATOR_ORDER
+    from repro.launch import fl_sim
+
+    with pytest.raises(ValueError) as ei:
+        fl_sim.run_experiment("mnist", "contextual", rounds=1,
+                              aggregator="fedsgd")
+    msg = str(ei.value)
+    assert "fedsgd" in msg
+    for name in AGGREGATOR_ORDER:
+        assert name in msg, f"registered aggregator {name} missing from the error"
+
+
+def test_fl_sim_cli_unknown_aggregator_exits_with_catalog(capsys):
+    from repro.launch import fl_sim
+
+    with pytest.raises(SystemExit) as ei:
+        fl_sim.main(["--aggregator", "fedsgd"])
+    assert ei.value.code == 2  # argparse usage error, not a stack trace
+    err = capsys.readouterr().err
+    assert "fedsgd" in err and "registered catalog" in err
+    assert "fedyogi" in err and "stale" in err
+
+
 def test_production_mesh_axes():
     from repro.launch.mesh import make_production_mesh
     # only shape math here (needs 256 devices to actually build)

@@ -129,8 +129,8 @@ def test_fused_round_bitwise_vs_unfused(monkeypatch, connection_rate):
     state, data, scn, step_f = _round_env(True, connection_rate)
     _, _, _, step_u = _round_env(False, connection_rate)
     si = jnp.zeros((), jnp.int32)
-    sf, mf = step_f(state, scn, si, data, True)
-    su, mu = step_u(state, scn, si, data, True)
+    sf, mf = step_f(state, scn, si, si, data, True)
+    su, mu = step_u(state, scn, si, si, data, True)
     for name in mf._fields:
         a, b = np.asarray(getattr(mf, name)), np.asarray(getattr(mu, name))
         assert np.array_equal(a, b, equal_nan=True), name
@@ -149,8 +149,8 @@ def test_fused_round_matches_on_ref_dispatch():
     state, data, scn, step_f = _round_env(True)
     _, _, _, step_u = _round_env(False)
     si = jnp.zeros((), jnp.int32)
-    _, mf = step_f(state, scn, si, data, True)
-    _, mu = step_u(state, scn, si, data, True)
+    _, mf = step_f(state, scn, si, si, data, True)
+    _, mu = step_u(state, scn, si, si, data, True)
     for name in mf._fields:
         a, b = np.asarray(getattr(mf, name)), np.asarray(getattr(mu, name))
         assert np.array_equal(a, b, equal_nan=True), name

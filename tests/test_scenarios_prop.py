@@ -110,6 +110,7 @@ def round_env():
     helper rather than a pytest fixture: the hypothesis fallback shim wraps
     tests with an empty signature, which hides fixture requests."""
     if "v" not in _ROUND_ENV:
+        from repro.fl.aggregators import AGGREGATOR_ORDER
         from repro.fl.engine import ExperimentEngine
         from repro.fl.rounds import (
             experiment_key,
@@ -117,16 +118,20 @@ def round_env():
             make_round_data,
         )
 
-        eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",))
+        # the engine compiles the FULL aggregator registry so every draw
+        # can sweep every registered server optimizer (the aggregator is a
+        # traced switch index — no retrace per rule)
+        eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                               aggregators=AGGREGATOR_ORDER)
         eng._ensure_spec()
         tc0 = scenario_config("ring", num_vehicles=N_CLIENTS)
         key = experiment_key("mnist", "contextual", 0)
         state, regions = init_state_traced(eng._init_params, FL, tc0, key)
         data = make_round_data(key, "mnist", FL, regions)
-        step = jax.jit(lambda s, scn: eng._round_step(
-            s, scn, jnp.zeros((), jnp.int32), data, True
+        step = jax.jit(lambda s, scn, ai: eng._round_step(
+            s, scn, jnp.zeros((), jnp.int32), ai, data, True
         ))
-        _ROUND_ENV["v"] = (state, step)
+        _ROUND_ENV["v"] = (state, step, len(AGGREGATOR_ORDER))
     return _ROUND_ENV["v"]
 
 
@@ -147,9 +152,10 @@ def test_round_step_finite_for_every_scenario(
     mean_speed, speed_std, accel_std, ou_theta,
     rush_amp, outage, coupling, truck, bus, day_amp,
 ):
-    # every draw sweeps EVERY registered scenario: new catalog entries are
-    # property-tested the moment they are registered
-    state, step = round_env()
+    # every draw sweeps EVERY registered scenario x EVERY registered
+    # aggregator: new catalog/registry entries are property-tested the
+    # moment they are registered
+    state, step, n_aggs = round_env()
     for scenario in sorted(SCENARIOS):
         tc = scenario_config(scenario, num_vehicles=N_CLIENTS)
         tc = dataclasses.replace(
@@ -165,16 +171,23 @@ def test_round_step_finite_for_every_scenario(
             fleet_bus_frac=bus,
             day_amp=day_amp,
         )
-        new_state, metrics = step(state, scenario_params(tc))
-        for name in ("duration", "sim_time", "test_acc", "test_loss"):
-            v = float(getattr(metrics, name))
-            assert np.isfinite(v), f"{scenario}: non-finite {name}={v}"
-        assert float(metrics.duration) > 0.0
-        for leaf in jax.tree_util.tree_leaves(new_state.params):
-            assert bool(jnp.all(jnp.isfinite(leaf))), f"{scenario}: non-finite params"
-        for name in ("pos", "speed", "accel", "compute_factor"):
-            leaf = getattr(new_state.twin, name)
-            assert bool(jnp.all(jnp.isfinite(leaf))), (
-                f"{scenario}: non-finite twin.{name}"
+        for agg in range(n_aggs):
+            tag = f"{scenario}/agg{agg}"
+            new_state, metrics = step(
+                state, scenario_params(tc), jnp.int32(agg)
             )
-        assert int(metrics.n_succeeded) <= int(metrics.n_selected)
+            for name in ("duration", "sim_time", "test_acc", "test_loss"):
+                v = float(getattr(metrics, name))
+                assert np.isfinite(v), f"{tag}: non-finite {name}={v}"
+            assert float(metrics.duration) > 0.0
+            for name in ("params", "opt_m", "opt_v"):
+                leaf = getattr(new_state, name)
+                assert bool(jnp.all(jnp.isfinite(leaf))), (
+                    f"{tag}: non-finite {name}"
+                )
+            for name in ("pos", "speed", "accel", "compute_factor"):
+                leaf = getattr(new_state.twin, name)
+                assert bool(jnp.all(jnp.isfinite(leaf))), (
+                    f"{tag}: non-finite twin.{name}"
+                )
+            assert int(metrics.n_succeeded) <= int(metrics.n_selected)
