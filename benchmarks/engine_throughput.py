@@ -182,7 +182,8 @@ def _run(num_clients=20, samples=64):
         "grid": len(grid),
         "grid_shape": {"strategies": len(STRATEGIES),
                        "aggregators": len(TIMED_AGGREGATORS),
-                       "seeds": len(SEEDS), "scenarios": len(SCENARIOS)},
+                       "seeds": len(SEEDS), "scenarios": len(SCENARIOS),
+                       "num_clients": num_clients},
         "aggregators": list(TIMED_AGGREGATORS),
         "num_clients": num_clients,
         "samples_per_client": samples,
@@ -205,6 +206,61 @@ def _run(num_clients=20, samples=64):
     }
 
 
+def fleet(num_clients=100_000, rounds=2, block=32, samples=2, label=None):
+    """Fleet-scale hierarchical run: the ``num_clients`` scaling path.
+
+    One contextual experiment at fleet size — two-tier RSU aggregation
+    (``fl.hierarchical``) with chunk-streamed cohorts
+    (``fl.client_block``): the cohort trains in fixed-size chunks whose
+    per-RSU (R, P) partials ride the inner scan carry, so the full (K, P)
+    update matrix never materializes and neither does an all-N warmup pass
+    (``warmup=False``).  Appends a record to BENCH_engine.json whose
+    ``grid_shape.num_clients`` documents the scale (the committed entry is
+    guarded by tests/test_benchmarks.py); cohort width stays ~100 via
+    ``select_fraction`` so round cost tracks the fleet's geometry +
+    selection sweeps, not the training FLOPs.
+    """
+    from repro.config import FLConfig
+    from repro.configs import get_config
+    from repro.fl.engine import ExperimentEngine
+
+    model = get_config("fl-mnist-mlp")
+    fl = FLConfig(num_clients=num_clients, samples_per_client=samples,
+                  batch_size=samples, num_clusters=8, local_epochs=1,
+                  sketch_dim=64,
+                  select_fraction=min(max(100.0 / num_clients, 1e-6), 1.0),
+                  hierarchical=True, client_block=block)
+    eng = ExperimentEngine(model, fl, "mnist", strategies=("contextual",),
+                           aggregators=("fedavg",), warmup=False)
+    t0 = time.perf_counter()
+    res = eng.run_grid(seeds=SEEDS, scenarios=("ring",), rounds=rounds,
+                       eval_every=rounds)
+    jax.block_until_ready(res.metrics)
+    dt = time.perf_counter() - t0
+    accs = {"/".join(map(str, k)): v for k, v in res.final_accuracy().items()}
+    r = {
+        "grid": len(res.runs),
+        "grid_shape": {"strategies": 1, "aggregators": 1, "seeds": len(SEEDS),
+                       "scenarios": 1, "num_clients": num_clients},
+        "hierarchical": True,
+        "client_block": block,
+        "cohort": fl.n_select,
+        "num_clients": num_clients,
+        "samples_per_client": samples,
+        "rounds_per_experiment": rounds,
+        "total_rounds": len(res.runs) * rounds,
+        "n_devices": len(jax.devices()),
+        "fleet_s": dt,
+        "rounds_per_s": len(res.runs) * rounds / dt,
+        "final_acc": accs,
+    }
+    entry = record_run(r, label or f"fleet-{num_clients}")
+    print(f"engine-fleet,clients={num_clients},cohort={fl.n_select},"
+          f"block={block},rounds={rounds},elapsed={dt:.1f}s,"
+          f"rounds_per_s={r['rounds_per_s']:.3f},label={entry['label']}")
+    return r
+
+
 def smoke(num_clients=8, samples=32):
     """1-round, tiny-grid sweep down the ENTIRE engine throughput path.
 
@@ -221,6 +277,8 @@ def smoke(num_clients=8, samples=32):
     from repro.configs import get_config
     from repro.fl.engine import ExperimentEngine
 
+    import dataclasses
+
     model = get_config("fl-mnist-mlp")
     fl = FLConfig(num_clients=num_clients, samples_per_client=samples,
                   batch_size=16, num_clusters=4, local_epochs=1)
@@ -231,18 +289,38 @@ def smoke(num_clients=8, samples=32):
     jax.block_until_ready(res.metrics)
     dt = time.perf_counter() - t0
     n = len(res.runs)
+    # the fleet-scaling lane at probe size: two-tier RSU aggregation with
+    # chunk-streamed cohorts down the same engine path, rsu_outage included
+    # so a dark RSU's dropped partial is exercised every tier-1 run
+    fl_h = dataclasses.replace(fl, hierarchical=True, client_block=3)
+    eng_h = ExperimentEngine(model, fl_h, "mnist", strategies=("contextual",),
+                             aggregators=AGGREGATORS, warmup=False)
+    t1 = time.perf_counter()
+    res_h = eng_h.run_grid(seeds=(0,), scenarios=("rush_hour", "rsu_outage"),
+                           rounds=1, eval_every=1)
+    jax.block_until_ready(res_h.metrics)
+    dt_h = time.perf_counter() - t1
     r = {"grid": n, "rounds_per_experiment": 1, "total_rounds": n,
-         "smoke_s": dt, "final_acc": res.final_accuracy()}
+         "smoke_s": dt, "final_acc": res.final_accuracy(),
+         "hierarchical": {"grid": len(res_h.runs), "client_block": 3,
+                          "smoke_s": dt_h,
+                          "final_acc": res_h.final_accuracy()}}
     print(f"engine-smoke,grid={n}x1r,scenarios={len(SCENARIOS)},"
-          f"aggregators={len(AGGREGATORS)},elapsed={dt:.1f}s")
+          f"aggregators={len(AGGREGATORS)},elapsed={dt:.1f}s,"
+          f"hier_grid={len(res_h.runs)}x1r,hier_elapsed={dt_h:.1f}s")
     return r
 
 
-def main(num_clients=None, samples=None, smoke_mode=False, label=None):
+def main(num_clients=None, samples=None, smoke_mode=False, label=None,
+         fleet_clients=None):
     # per-mode defaults: the probe stays tiny, the timed bench keeps its
-    # reference 24-run grid; explicit sizes pass through to either mode
+    # reference 24-run grid; explicit sizes pass through to either mode.
+    # ``fleet_clients`` (--clients) selects the fleet-scale hierarchical
+    # run instead of the timed reference grid.
     if smoke_mode:
         return smoke(num_clients=num_clients or 8, samples=samples or 32)
+    if fleet_clients:
+        return fleet(num_clients=fleet_clients, label=label)
     if os.environ.get("REPRO_BENCH_CACHED_ONLY"):
         # the trajectory file is the only cache this bench believes in:
         # report the newest record instead of timing a live sweep
@@ -276,7 +354,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="1 round, tiny grid, full catalog — the tier-1 probe")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="fleet-scale hierarchical run at this many clients "
+                         "(two-tier RSU aggregation, chunk-streamed cohorts)")
     ap.add_argument("--label", default=None,
                     help="label recorded with this run in BENCH_engine.json")
     args = ap.parse_args()
-    main(smoke_mode=args.smoke, label=args.label)
+    main(smoke_mode=args.smoke, label=args.label, fleet_clients=args.clients)

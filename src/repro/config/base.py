@@ -307,6 +307,18 @@ class FLConfig:
     # FedProx client-side proximal term mu (0 = exact FedAvg local SGD;
     # the mu=0 program is bitwise-identical to plain SGD by construction)
     fedprox_mu: float = 0.0
+    # Two-tier (client -> attached RSU -> server) aggregation.  With
+    # ``hierarchical=True`` the round core routes FedAvg weights through
+    # per-RSU sample-count masses (dark RSUs drop their partial); with all
+    # RSUs live this is bitwise-identical to the flat path because the
+    # masses are integer-valued (tests/test_hierarchical.py).
+    # ``client_block > 0`` additionally STREAMS the cohort through
+    # fixed-size chunks of that many clients (requires hierarchical=True):
+    # per-RSU (R, P) partials ride the scan carry and the server step
+    # reduces R partials instead of K clients — the num_clients scaling
+    # path (cohorts never materialize a full (K, P) update matrix).
+    hierarchical: bool = False
+    client_block: int = 0
     seed: int = 0
 
     @property

@@ -139,7 +139,12 @@ def rsu_geometry(pos: jax.Array, cfg: TrafficConfig):
     rid = jnp.argmin(d_along, axis=1)
     d_min = jnp.take_along_axis(d_along, rid[:, None], axis=1)[:, 0]
     dist3d = jnp.sqrt(d_min**2 + 15.0**2 + 5.0**2)  # lateral offset + mast height
-    load = jnp.sum(rid[:, None] == rid[None, :], axis=1).astype(jnp.float32)
+    # per-RSU attachment counts gathered back per client — O(N + R) instead
+    # of the (N, N) same-attachment comparison; counts are integer-valued
+    # floats, so the scatter-add layout equals the comparison sum bitwise
+    # (and matches the kernel's phase-0 accumulator the same way)
+    counts = jnp.zeros((rsu_pos.shape[0],), jnp.float32).at[rid].add(1.0)
+    load = counts[rid]
     return rid, dist3d, load
 
 

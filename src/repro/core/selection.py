@@ -48,14 +48,42 @@ def select_network(key, connected, latency_pred, clusters, n_select, gamma):
 
 
 def _per_cluster_rank(score: jax.Array, clusters: jax.Array) -> jax.Array:
-    """Rank of each client within its cluster by ascending score."""
+    """Rank of each client within its cluster by ascending score.
+
+    O(N log N): lexsort by (cluster, score, index) — index breaks score
+    ties, exactly the tie rule of the historical (N, N) comparison-count
+    form — then each client's rank is its position minus the running start
+    of its cluster segment.  Integer-exact, so it equals the comparison
+    count bitwise while scaling to fleet-size N (the old form materialized
+    an (N, N) bool matrix per election).
+    """
     N = score.shape[0]
-    same = clusters[:, None] == clusters[None, :]  # (N,N)
-    better = same & (
-        (score[None, :] < score[:, None])
-        | ((score[None, :] == score[:, None]) & (jnp.arange(N)[None, :] < jnp.arange(N)[:, None]))
-    )
-    return jnp.sum(better, axis=1)  # 0 = best in cluster
+    idx = jnp.arange(N)
+    order = jnp.lexsort((idx, score, clusters))
+    sc = clusters[order]
+    newseg = jnp.concatenate([jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+    start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(newseg, idx, 0)
+    )  # running segment start per sorted position
+    rank_sorted = (idx - start).astype(jnp.int32)
+    return jnp.zeros((N,), jnp.int32).at[order].set(rank_sorted)  # 0 = best
+
+
+def _cluster_sizes(clusters: jax.Array, connected: jax.Array) -> jax.Array:
+    """(N,) connected-member count of each client's cluster.
+
+    Sort-compacted scatter-add counts gathered back per client —
+    integer-exact match of the (N, N) same-cluster comparison sum in
+    O(N log N).  Ids are compacted through the sorted segment map first,
+    so the scatter stays in-bounds even when the cluster-id range exceeds
+    N (more clusters than clients)."""
+    N = clusters.shape[0]
+    order = jnp.argsort(clusters, stable=True)
+    sc = clusters[order]
+    newseg = jnp.concatenate([jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+    seg = jnp.cumsum(newseg.astype(jnp.int32)) - 1  # compact id, < N
+    cnt = jnp.zeros((N,), jnp.int32).at[seg].add(connected[order].astype(jnp.int32))
+    return jnp.zeros((N,), jnp.int32).at[order].set(cnt[seg])
 
 
 def select_data(key, connected, latency_pred, clusters, n_select, gamma):
@@ -73,9 +101,7 @@ def select_contextual(key, connected, latency_pred, clusters, n_select, gamma):
     """Fast-gamma: per cluster, the gamma-fraction lowest-latency clients."""
     score = jnp.where(connected, latency_pred, _BIG)
     rank = _per_cluster_rank(score, clusters)
-    csize = jnp.sum(
-        (clusters[:, None] == clusters[None, :]) & connected[None, :], axis=1
-    )
+    csize = _cluster_sizes(clusters, connected)
     quota = jnp.maximum(jnp.ceil(gamma * csize.astype(jnp.float32)), 1.0)
     mask = connected & (rank < quota)
     # trim overshoot to n_select, preferring lower latency

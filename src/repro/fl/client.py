@@ -63,7 +63,12 @@ def make_local_trainer(
     @jax.jit
     def train_cohort(global_params, images, labels, key):
         K = images.shape[0]
-        keys = jax.random.split(key, K)
+        # ``key`` is either one cohort key (split K ways here — the
+        # historical behavior, bitwise-frozen) or an already-split (K,)
+        # per-client key array: the chunk-streamed hierarchical lane splits
+        # ONCE for the full cohort and slices per chunk, so each client
+        # consumes the same key it would in the unblocked lane.
+        keys = key if key.ndim == 1 else jax.random.split(key, K)
         new_params = jax.vmap(lambda im, lb, k: local_sgd(global_params, im, lb, k))(
             images, labels, keys
         )

@@ -200,10 +200,16 @@ class ExperimentEngine:
         partition_on_device: bool = True,
         init_on_device: bool = True,
         aggregators: Sequence[str] = ("fedavg",),
+        warmup: bool = True,
     ):
         if num_clients is not None:
             fl_cfg = dataclasses.replace(fl_cfg, num_clients=num_clients)
         self.fl = fl_cfg
+        # ``warmup=False`` skips the deadline-rule bootstrap (which trains
+        # every one of the N clients once): the fleet-scale hierarchical
+        # path can't afford an all-N pass, and cluster-free strategies
+        # never read the warm sketches anyway
+        self.warmup_enabled = bool(warmup)
         self.dataset = dataset
         self.strategies = tuple(strategies)
         self.aggregators = validate_aggregators(aggregators)
@@ -313,7 +319,8 @@ class ExperimentEngine:
         def fn(states, datas, scns, strat_idx, agg_idx, data_idx, flags):
             def local(states, datas, scns, strat_idx, agg_idx, data_idx, flags):
                 return self._grid(
-                    states, datas, scns, strat_idx, agg_idx, data_idx, flags
+                    states, datas, scns, strat_idx, agg_idx, data_idx, flags,
+                    warm=self.warmup_enabled,
                 )
 
             return shard_map(
@@ -521,13 +528,13 @@ class ExperimentEngine:
             else:  # divisibility fallback (should not happen after padding)
                 _, metrics = self._grid_fn(
                     states, stack_rows(data_rows), scns, strat_idx, agg_idx,
-                    jnp.asarray(data_idx), flags,
+                    jnp.asarray(data_idx), flags, warm=self.warmup_enabled,
                 )
                 metrics = jax.tree_util.tree_map(lambda x: x[:G], metrics)
         else:
             _, metrics = self._grid_fn(
                 states, stack_rows(data_rows), scns, strat_idx, agg_idx,
-                jnp.asarray(data_idx), flags,
+                jnp.asarray(data_idx), flags, warm=self.warmup_enabled,
             )
         scenarios = list(scenarios)
 

@@ -124,6 +124,23 @@ def client_sample_counts(labels: jax.Array) -> jax.Array:
     return jnp.sum(labels >= 0, axis=1).astype(jnp.float32)
 
 
+def rsu_sample_mass(weights: jax.Array, rid: jax.Array, n_rsu: int) -> jax.Array:
+    """(R,) per-RSU aggregation mass: scatter-sum of weights by attachment.
+
+    The edge half of two-tier FedAvg weighting: each RSU's mass is the sum
+    of its attached clients' (masked) sample-count weights, and the server
+    normalizes by the sum of LIVE RSU masses.  ``client_sample_counts``
+    values are integer-valued floats, so this scatter-add reassociation is
+    EXACT — summing per-RSU masses equals summing the flat weight vector
+    bit for bit, which is what keeps sample-count-weighted FedAvg bitwise
+    between the flat and hierarchical lanes
+    (tests/test_hierarchical.py pins the regression).
+    """
+    return jnp.zeros((n_rsu,), jnp.float32).at[rid].add(
+        weights.astype(jnp.float32)
+    )
+
+
 def partition_clients(key, dataset: str, cfg: FLConfig, regions=None):
     """Returns (images (C,n,H,W,ch), labels (C,n)) for all C clients.
 

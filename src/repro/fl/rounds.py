@@ -84,7 +84,7 @@ from repro.config import FLConfig, TrafficConfig
 from repro.core.fusion import fuse_kinematics, fuse_messages
 from repro.core.messages import emit_cams, emit_cpms
 from repro.core.network import connectivity, latency_model
-from repro.core.rttg import build_rttg
+from repro.core.rttg import build_rttg, n_rsu_of, rsu_up_mask
 from repro.core.selection import STRATEGIES
 from repro.core.clustering import (
     apply_sketch,
@@ -103,10 +103,15 @@ from repro.fl.aggregators import (
 )
 from repro.fl.client import make_local_trainer
 from repro.fl.partition import client_sample_counts, make_test_set, partition_clients
-from repro.fl.server import apply_delta_flat, normalized_weights
+from repro.fl.server import (
+    apply_delta_flat,
+    normalized_weights,
+    rsu_normalized_weights,
+)
 from repro.kernels.ops import (
     fedavg_reduce_auto,
     pick_block_p,
+    rsu_reduce_auto,
     rttg_latency_auto,
     server_update_auto,
 )
@@ -412,8 +417,34 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
 
     ``fused`` selects the one-sweep ``rttg_latency`` geometry path
     (default) vs the legacy composition — bitwise-identical by contract.
+
+    Two-tier aggregation (``fl.hierarchical``): FedAvg weights route
+    through per-RSU sample-count masses (clients reduce into their
+    attached RSU, live RSUs reduce into the server; dark RSUs drop their
+    partial) — bitwise-identical to the flat lane while every RSU is live,
+    because the masses are integer-valued (tests/test_hierarchical.py).
+    ``fl.client_block > 0`` additionally STREAMS the cohort: an inner
+    ``lax.scan`` trains fixed-size client chunks and segment-reduces each
+    into (R, P) per-RSU partials riding the chunk carry
+    (``kernels.ops.rsu_reduce_auto``), so the full (K, P) update matrix
+    never materializes and the server step reduces R partials through the
+    same fused ``server_update`` pass — the ``num_clients`` scaling path.
+    Round ECONOMICS (selection, duration, twin, metrics) are computed
+    before training from the same expressions in both modes, so they stay
+    bitwise across flat/hierarchical/blocked lanes; the blocked lane's
+    model update reassociates the cohort sum per RSU (allclose, exact for
+    the all-live integer-weight case chunk-wise).
     """
     strategies = tuple(strategies)
+    hierarchical = bool(getattr(fl, "hierarchical", False))
+    client_block = int(getattr(fl, "client_block", 0))
+    if client_block < 0:
+        raise ValueError(f"client_block must be >= 0, got {client_block}")
+    if client_block and not hierarchical:
+        raise ValueError(
+            "client_block streaming segments the cohort by RSU attachment; "
+            "set hierarchical=True to enable it"
+        )
     aggregators = validate_aggregators(aggregators)
     # local aggregator index -> global AGGREGATOR_ORDER index (the fused
     # server_update pass and the STALE_IDX test both speak global)
@@ -472,12 +503,18 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         return lat_pred, connected
 
     def _realized(mid_twin, scn, rk):
-        """Mid-round geometry on the TRUE evolved topology."""
+        """Mid-round geometry on the TRUE evolved topology.
+
+        The hierarchical lanes additionally need the attachment ids the
+        chain's argmin already resolved (segmenting the edge reduce), so
+        they arrive as a third output — adding it leaves the latency /
+        connectivity expressions untouched in both compositions.
+        """
         k_cr = fold_in_str(rk, "upload-cr")
         if fused:
             return rttg_latency_auto(
                 mid_twin.pos, mid_twin.speed, mid_twin.accel, mid_twin.t, mb,
-                _forced(k_cr), scn, predict=False,
+                _forced(k_cr), scn, predict=False, want_rid=hierarchical,
             )
         mid_rttg = build_rttg(
             mid_twin.t, mid_twin.pos, mid_twin.speed, mid_twin.accel,
@@ -485,6 +522,8 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         )
         real_lat = latency_model(mid_rttg, mb, scn)
         still_conn = connectivity(mid_rttg, scn, cr, k_cr)
+        if hierarchical:
+            return real_lat, still_conn, mid_rttg.rsu_id.astype(jnp.int32)
         return real_lat, still_conn
 
     def _elect(connected, lat_pred, clusters, k, strategy_idx):
@@ -526,18 +565,12 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         slot_valid = idx < N
         idx_c = jnp.where(slot_valid, idx, 0)
 
-        if data_idx is None:
-            imgs, lbls = data.images[idx_c], data.labels[idx_c]
-        else:
-            imgs, lbls = data.images[data_idx, idx_c], data.labels[data_idx, idx_c]
-        dmask = slot_valid.reshape((K,) + (1,) * (imgs.ndim - 1))
-        imgs = imgs * dmask
-        lbls = jnp.where(slot_valid[:, None], lbls, 0)
-        params = unflatten_from_vector(state.params, param_spec)
-        _, vecs = trainer(params, imgs, lbls, fold_in_str(rk, "local"))
-        vecs = vecs * slot_valid[:, None]
-
         # ---- realized round economics on the TRUE evolved topology -----
+        # Computed BEFORE training: a pure dataflow reorder (every PRNG
+        # stream is name-folded and nothing here reads the updates), so
+        # flat lanes trace the same values bitwise — and the blocked lane
+        # must know the per-client weights before its chunk scan trains
+        # anything.
         compute_i = compute_s * state.twin.compute_factor[idx_c]
         nsel_f = jnp.maximum(n_selected.astype(jnp.float32), 1.0)
         mean_compute = jnp.sum(jnp.where(slot_valid, compute_i, 0.0)) / nsel_f
@@ -545,7 +578,10 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             state.twin, scn, fold_in_str(rk, "mid"), mean_compute,
             num_substeps=ADVANCE_SUBSTEPS,
         )
-        real_lat, still_conn = _realized(mid_twin, scn, rk)
+        if hierarchical:
+            real_lat, still_conn, rid = _realized(mid_twin, scn, rk)
+        else:
+            real_lat, still_conn = _realized(mid_twin, scn, rk)
         ok = slot_valid & still_conn[idx_c]
         ok_any = jnp.any(ok)
         timeout = jnp.float32(fl.round_timeout_s)
@@ -558,20 +594,37 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             n_selected > 0, dur_core + fl.server_agg_s, timeout
         )
 
-        # ---- server update over deadline survivors (one fused flat pass)
+        # ---- FedAvg weights (flat, or RSU-routed two-tier) -------------
         # weights come from the per-client sample counts the data row
         # carries (equal to fl.samples_per_client while every slot fills)
         counts_k = _row(data.counts, data_idx)[idx_c]
-        bp = pick_block_p(K, P)
+        if hierarchical:
+            R = n_rsu_of(scn)
+            live = rsu_up_mask(scn)
+            rid_k = rid[idx_c]
+            # the attachment argmin never picks a dark RSU, so this fold is
+            # the identity whenever attachments are current — it is the
+            # contract that a dark RSU's partial NEVER reaches the server
+            live_k = live[rid_k]
+
+            def _w_strict(m, c):
+                return rsu_normalized_weights(m & live_k, c, rid_k, live, R)[0]
+
+            def _w_stale(m, c):
+                # float-valued discounted counts don't reassociate exactly:
+                # keep the flat-sum normalizer (mass_norm=False) so the
+                # stale lane stays bitwise with its flat sibling too
+                return rsu_normalized_weights(
+                    m & live_k, c, rid_k, live, R, mass_norm=False
+                )[0]
+        else:
+            _w_strict = _w_stale = normalized_weights
+
         if plain_fedavg:
-            # THE pre-registry path, traced verbatim: plain FedAvg, server
-            # moment vectors ride the carry untouched
-            w = normalized_weights(ok, counts_k)
-            delta = fedavg_reduce_auto(vecs, w, block_p=bp)
-            params_vec = jnp.where(
-                ok_any, apply_delta_flat(state.params, delta), state.params
-            )
-            opt_m, opt_v = state.opt_m, state.opt_v
+            # THE pre-registry path: plain FedAvg weights, server moment
+            # vectors ride the carry untouched
+            w = _w_strict(ok, counts_k)
+            upd_any = ok_any
         else:
             gidx = agg_global[aggregator_idx]
             is_stale = gidx == STALE_IDX
@@ -579,31 +632,122 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             # weight from their REALIZED round time instead of dropping to
             # zero; survivors and every other rule keep the strict weights
             # bitwise (jnp.where passes the untaken side through untouched)
-            w_strict = normalized_weights(ok, counts_k)
+            w_strict = _w_strict(ok, counts_k)
             disc = jnp.where(ok, 1.0, staleness_scale(per_slot, timeout))
-            w_stale = normalized_weights(slot_valid, counts_k * disc)
+            w_stale = _w_stale(slot_valid, counts_k * disc)
             w = jnp.where(is_stale, w_stale, w_strict)
             # under stale ANY selected client contributes an update; round
             # economics (duration, base twin, metrics) keep the strict
             # deadline semantics so aggregator lanes stay comparable (see
             # the module docstring for how far that identity extends)
             upd_any = jnp.where(is_stale, n_selected > 0, ok_any)
+
+        # ---- local training + edge reduce ------------------------------
+        params = unflatten_from_vector(state.params, param_spec)
+        if client_block:
+            # chunk-streamed two-tier lane: an inner scan trains fixed-size
+            # client chunks and segment-reduces each straight into (R, P)
+            # per-RSU partials riding the chunk carry — the full (K, P)
+            # update matrix never materializes.  Per-client PRNG keys come
+            # from ONE cohort-wide split (the exact stream the unblocked
+            # trainer consumes), sliced per chunk; padding slots repeat
+            # key 0 and train zeroed data into zero-masked updates.
+            B = client_block
+            nC = -(-K // B)
+            pad = nC * B - K
+
+            def _pad_k(x, fill):
+                if pad == 0:
+                    return x
+                return jnp.concatenate(
+                    [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)]
+                )
+
+            keys_all = jax.random.split(fold_in_str(rk, "local"), K)
+            if pad:
+                kd = jax.random.key_data(keys_all)
+                kd = jnp.concatenate([kd, jnp.tile(kd[:1], (pad, 1))])
+                keys_all = jax.random.wrap_key_data(kd)
+            xs = (
+                _pad_k(idx_c, 0).reshape(nC, B),
+                _pad_k(slot_valid, False).reshape(nC, B),
+                _pad_k(w, 0.0).reshape(nC, B),
+                _pad_k(rid_k, 0).reshape(nC, B),
+                _pad_k(ok, False).reshape(nC, B),
+                keys_all.reshape(nC, B),
+            )
+
+            def _chunk(carry, xs_c):
+                partials, sketches, sketch_age = carry
+                i_c, v_c, w_c, r_c, ok_c, k_c = xs_c
+                if data_idx is None:
+                    imgs_c = data.images[i_c]
+                    lbls_c = data.labels[i_c]
+                else:
+                    imgs_c = data.images[data_idx, i_c]
+                    lbls_c = data.labels[data_idx, i_c]
+                dm = v_c.reshape((B,) + (1,) * (imgs_c.ndim - 1))
+                imgs_c = imgs_c * dm
+                lbls_c = jnp.where(v_c[:, None], lbls_c, 0)
+                _, vb = trainer(params, imgs_c, lbls_c, k_c)
+                vb = vb * v_c[:, None]
+                part_c, _ = rsu_reduce_auto(vb, w_c, r_c, R)
+                sks_c = jax.vmap(
+                    lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
+                )(vb)
+                scat = jnp.where(ok_c, i_c, N)  # out-of-bounds rows drop
+                sketches = sketches.at[scat].set(sks_c, mode="drop")
+                sketch_age = sketch_age.at[scat].set(0.0, mode="drop")
+                return (partials + part_c, sketches, sketch_age), None
+
+            (partials, sketches, sketch_age), _ = jax.lax.scan(
+                _chunk,
+                (jnp.zeros((R, P), jnp.float32), state.sketches,
+                 state.sketch_age),
+                xs,
+            )
+            sketch_age = sketch_age + 1.0
+            # server tier: R live partials (weights already folded in at
+            # the edge) reduce through the same fused flat pass
+            red, red_w, bp = partials, live.astype(jnp.float32), \
+                pick_block_p(R, P)
+        else:
+            if data_idx is None:
+                imgs, lbls = data.images[idx_c], data.labels[idx_c]
+            else:
+                imgs = data.images[data_idx, idx_c]
+                lbls = data.labels[data_idx, idx_c]
+            dmask = slot_valid.reshape((K,) + (1,) * (imgs.ndim - 1))
+            imgs = imgs * dmask
+            lbls = jnp.where(slot_valid[:, None], lbls, 0)
+            _, vecs = trainer(params, imgs, lbls, fold_in_str(rk, "local"))
+            vecs = vecs * slot_valid[:, None]
+
+            # ---- deadline rule: survivors report sketches --------------
+            sks = jax.vmap(
+                lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
+            )(vecs)
+            scatter = jnp.where(ok, idx_c, N)  # out-of-bounds rows drop
+            sketches = state.sketches.at[scatter].set(sks, mode="drop")
+            sketch_age = state.sketch_age.at[scatter].set(0.0, mode="drop") + 1.0
+            red, red_w, bp = vecs, w, pick_block_p(K, P)
+
+        # ---- server update over deadline survivors (one fused flat pass)
+        if plain_fedavg:
+            delta = fedavg_reduce_auto(red, red_w, block_p=bp)
+            params_vec = jnp.where(
+                upd_any, apply_delta_flat(state.params, delta), state.params
+            )
+            opt_m, opt_v = state.opt_m, state.opt_v
+        else:
             new_p, new_m, new_v = server_update_auto(
-                vecs, w, state.params, state.opt_m, state.opt_v, gidx,
+                red, red_w, state.params, state.opt_m, state.opt_v, gidx,
                 state.round, eta=hp.eta, beta1=hp.beta1, beta2=hp.beta2,
                 tau=hp.tau, block_p=bp,
             )
             params_vec = jnp.where(upd_any, new_p, state.params)
             opt_m = jnp.where(upd_any, new_m, state.opt_m)
             opt_v = jnp.where(upd_any, new_v, state.opt_v)
-
-        # ---- deadline rule: survivors report sketches ------------------
-        sks = jax.vmap(
-            lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
-        )(vecs)
-        scatter = jnp.where(ok, idx_c, N)  # out-of-bounds rows drop
-        sketches = state.sketches.at[scatter].set(sks, mode="drop")
-        sketch_age = state.sketch_age.at[scatter].set(0.0, mode="drop") + 1.0
 
         # ---- advance the twin to round end -----------------------------
         base = jax.tree_util.tree_map(

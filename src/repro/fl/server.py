@@ -58,3 +58,35 @@ def normalized_weights(mask_selected: jax.Array, n_samples: jax.Array) -> jax.Ar
     """FedAvg weights proportional to sample counts, masked + normalized."""
     w = mask_selected.astype(jnp.float32) * n_samples.astype(jnp.float32)
     return w / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def rsu_normalized_weights(mask_selected, n_samples, rid, live, n_rsu: int, *,
+                           mass_norm: bool = True):
+    """Two-tier FedAvg weights: per-RSU mass aggregation before the server
+    normalization.  Returns ``(w (K,), mass (R,), total ())``.
+
+    The unnormalized weights use the EXACT ``normalized_weights``
+    expression (mask * counts, as f32); the normalizer is the sum of LIVE
+    RSU masses (``partition.rsu_sample_mass``) instead of the flat sum —
+    dark RSUs (``rsu_outage``) drop their partial, contributing exactly 0.
+    With every RSU live and integer-valued ``n_samples`` (sample counts),
+    the per-RSU reassociation is exact, so the result is BITWISE equal to
+    ``normalized_weights`` — the hierarchical lane's differential
+    contract.  ``mass_norm=False`` keeps the per-RSU masses for the edge
+    reduce but normalizes by the flat (live-masked) sum — the staleness
+    lane, whose discounted weights are NOT integer-valued, uses this so
+    its normalizer never reassociates floats.
+
+    The caller folds RSU liveness into ``mask_selected`` (AND with
+    ``live[rid]``); the attachment argmin already never points at a dark
+    RSU, so that fold is the identity whenever attachments are current.
+    """
+    from repro.fl.partition import rsu_sample_mass
+
+    w = mask_selected.astype(jnp.float32) * n_samples.astype(jnp.float32)
+    mass = rsu_sample_mass(w, rid, n_rsu)
+    if mass_norm:
+        total = jnp.sum(jnp.where(live, mass, 0.0))
+    else:
+        total = jnp.sum(w)
+    return w / jnp.maximum(total, 1e-9), mass, total

@@ -33,6 +33,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.pairwise_cosine import pairwise_cosine
+from repro.kernels.rsu_reduce import rsu_reduce
 from repro.kernels.rttg_latency import rttg_latency
 from repro.kernels.server_update import server_update
 from repro.kernels.ssd_scan import ssd_scan
@@ -41,17 +42,20 @@ from repro.kernels.swa_decode import swa_decode
 __all__ = [
     "pairwise_cosine",
     "fedavg_reduce",
+    "rsu_reduce",
     "rttg_latency",
     "server_update",
     "swa_decode",
     "ssd_scan",
     "pairwise_cosine_auto",
     "fedavg_reduce_auto",
+    "rsu_reduce_auto",
     "rttg_latency_auto",
     "server_update_auto",
     "swa_decode_auto",
     "ssd_scan_auto",
     "pick_block_p",
+    "pick_rsu_blocks",
 ]
 
 # VMEM the flat-reduction working set may occupy: the (K, block_p) update
@@ -94,6 +98,38 @@ def pick_block_p(K: int, P: int, vmem_budget: int = FEDAVG_VMEM_BUDGET) -> int:
     return bp
 
 
+def pick_rsu_blocks(K: int, P: int, n_rsu: int,
+                    vmem_budget: int = FEDAVG_VMEM_BUDGET) -> tuple[int, int]:
+    """(block_k, block_p) for the segmented (K, P) -> (R, P) reduce.
+
+    The ``rsu_reduce`` working set per program is the (block_k, block_p)
+    update tile PLUS the (Rp, block_p) partial-sum accumulator (Rp = the
+    RSU axis padded to the 128-lane minimum), so the budget invariant is
+    ``(block_k + Rp) * block_p * 4 <= vmem_budget`` — ``pick_block_p``'s
+    rule with the cohort width inflated by the accumulator rows.  Small
+    cohorts keep a single k-block (``block_k = K``), which is the
+    bitwise-vs-ref geometry; fleet-size cohorts split K into the widest
+    power-of-two chunk that still fits a minimum-width tile (the k-blocked
+    walk's per-RSU sums then compose chunk-wise — exact for the
+    integer-valued operands the hierarchical weight path feeds it).
+    """
+    if K <= 0:
+        raise ValueError(f"cohort width must be positive, got K={K}")
+    rp = max(_BLOCK_P_MIN, -(-n_rsu // _BLOCK_P_MIN) * _BLOCK_P_MIN)
+    bk = K
+    if (K + rp) * _BLOCK_P_MIN * 4 > vmem_budget:
+        bk = 1
+        while (bk * 2 + rp) * _BLOCK_P_MIN * 4 <= vmem_budget and bk * 2 < K:
+            bk *= 2
+        if (bk + rp) * _BLOCK_P_MIN * 4 > vmem_budget:
+            raise ValueError(
+                f"RSU axis n_rsu={n_rsu} cannot fit a {_BLOCK_P_MIN}-lane "
+                f"accumulator in {vmem_budget} B of VMEM"
+            )
+    bp = pick_block_p(bk + rp, P, vmem_budget)
+    return bk, bp
+
+
 def _mode() -> str:
     if jax.default_backend() == "tpu":
         return "compiled"
@@ -117,6 +153,22 @@ def fedavg_reduce_auto(updates, weights, **kw):
     return fedavg_reduce(updates, weights, interpret=mode == "interpret", **kw)
 
 
+def rsu_reduce_auto(updates, weights, rid, n_rsu, **kw):
+    """Segment-reduce by RSU attachment with backend dispatch.
+
+    -> (partials (R, P), mass (R,)).  Tile policy: ``pick_rsu_blocks`` —
+    the (Rp, block_p) accumulator joins the update tile in the budget.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.rsu_reduce(updates, weights, rid, n_rsu)
+    bk, bp = pick_rsu_blocks(updates.shape[0], updates.shape[1], n_rsu)
+    kw.setdefault("block_k", bk)
+    kw.setdefault("block_p", bp)
+    return rsu_reduce(updates, weights, rid, n_rsu,
+                      interpret=mode == "interpret", **kw)
+
+
 def server_update_auto(updates, weights, params, m, v, agg_idx, rnd, *,
                        eta, beta1, beta2, tau, **kw):
     """Fused server update (reduce + moments + AXPY) with backend dispatch.
@@ -137,15 +189,16 @@ def server_update_auto(updates, weights, params, m, v, agg_idx, rnd, *,
 
 
 def rttg_latency_auto(pos, speed, accel, t, model_bytes, forced, cfg, *,
-                      predict, **kw):
+                      predict, want_rid=False, **kw):
     mode = _mode()
     if mode == "ref":
         return ref.rttg_latency(
-            pos, speed, accel, t, model_bytes, forced, cfg, predict
+            pos, speed, accel, t, model_bytes, forced, cfg, predict,
+            want_rid=want_rid,
         )
     return rttg_latency(
         pos, speed, accel, t, model_bytes, forced, cfg, predict=predict,
-        interpret=mode == "interpret", **kw,
+        want_rid=want_rid, interpret=mode == "interpret", **kw,
     )
 
 

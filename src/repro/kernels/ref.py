@@ -24,6 +24,28 @@ def fedavg_reduce(updates: jax.Array, weights: jax.Array) -> jax.Array:
     )
 
 
+def rsu_reduce(updates, weights, rid, n_rsu: int):
+    """(K, P) x (K,) x (K,) ids -> (partials (R, P), mass (R,)), fp32.
+
+    Segment-reduce by RSU attachment: ``partials[r] = sum_k w_k [rid_k ==
+    r] u_k`` and ``mass[r] = sum_k w_k [rid_k == r]`` — the edge
+    (client -> RSU) half of two-tier aggregation.  Contraction forms match
+    the Pallas kernel's single-k-block geometry expression for expression
+    (one-hot routing matrix, one ``dot_general`` over the cohort axis,
+    one column sum), which is what makes the kernel contract bitwise.
+    """
+    w = weights.astype(jnp.float32)
+    onehot = rid[:, None] == jnp.arange(n_rsu, dtype=rid.dtype)[None, :]
+    m = onehot.astype(jnp.float32) * w[:, None]  # (K, R) routing matrix
+    partials = jax.lax.dot_general(
+        m, updates.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    mass = jnp.sum(m, axis=0)
+    return partials, mass
+
+
 def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
                   eta=1.0, beta1=0.9, beta2=0.99, tau=1e-3):
     """Fused server update oracle -> (params', m', v'), all (P,) fp32.
@@ -47,15 +69,18 @@ def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
     return p2, m2, v2
 
 
-def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict):
-    """(N,) kinematics -> (latency (N,) f32, connected (N,) bool).
+def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict,
+                 want_rid=False):
+    """(N,) kinematics -> (latency (N,) f32, connected (N,) bool[, rid]).
 
     THE unfused composition: core pure forms chained exactly as the legacy
     round path chains them (predict_kinematics -> rsu_geometry ->
     latency_from_geometry / connected_from_snr).  The Pallas kernel's
     bitwise contract is against this function — which is also what the
     ``*_auto`` dispatch runs on non-TPU backends, where interpret-mode
-    tiling walks would be pure overhead.
+    tiling walks would be pure overhead.  ``want_rid=True`` appends the
+    (N,) int32 attachment ids the chain's argmin already resolved — the
+    hierarchical round path segments its edge aggregation on them.
     """
     from repro.core.network import (
         connected_from_snr,
@@ -69,9 +94,11 @@ def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict):
         n = horizon_steps(cfg.predict_horizon_s, cfg)
         pos, speed, accel = predict_kinematics(pos, speed, accel, n, cfg)
         t = t + cfg.predict_horizon_s
-    _, dist3d, load = rsu_geometry(pos, cfg)
+    rid, dist3d, load = rsu_geometry(pos, cfg)
     lat = latency_from_geometry(t, speed, dist3d, load, model_bytes, cfg)
     conn = connected_from_snr(snr_from_dist(dist3d, cfg), cfg, forced)
+    if want_rid:
+        return lat, conn, rid.astype(jnp.int32)
     return lat, conn
 
 

@@ -69,10 +69,16 @@ def _pack_scalars(t, model_bytes, cfg) -> jax.Array:
     return jnp.stack(row).reshape(1, _S)
 
 
-def _chain_kernel(n_clients, n_rsu, n_steps, dt, horizon_s,
+def _chain_kernel(n_clients, n_rsu, n_steps, dt, horizon_s, want_rid,
                   s_ref, mask_ref, pos_ref, speed_ref, accel_ref, forced_ref,
-                  lat_ref, conn_ref, counts_ref):
-    """One grid step: (phase, j) over the two-phase N-block walk."""
+                  lat_ref, conn_ref, *rest):
+    """One grid step: (phase, j) over the two-phase N-block walk.
+
+    ``rest`` is (rid_ref,) counts_ref — the optional attachment-id output
+    (``want_rid``) slots in before the scratch accumulator.
+    """
+    rid_ref = rest[0] if want_rid else None
+    counts_ref = rest[-1]
     phase = pl.program_id(0)
     j = pl.program_id(1)
     bn = pos_ref.shape[0]
@@ -122,6 +128,8 @@ def _chain_kernel(n_clients, n_rsu, n_steps, dt, horizon_s,
         # a defined value (phase 1 overwrites with the real results)
         lat_ref[...] = jnp.zeros_like(lat_ref)
         conn_ref[...] = jnp.zeros_like(conn_ref)
+        if want_rid:
+            rid_ref[...] = jnp.zeros_like(rid_ref)
 
     @pl.when(phase == 1)
     def _finish():
@@ -158,6 +166,10 @@ def _chain_kernel(n_clients, n_rsu, n_steps, dt, horizon_s,
         conn_ref[...] = jnp.where(
             (snr >= s["snr_min_db"]) & (forced_ref[...] != 0.0), 1.0, 0.0
         )
+        if want_rid:
+            # the attachment argmin this phase already resolved, exported
+            # for the hierarchical round path (f32 block; cast outside)
+            rid_ref[...] = rid.astype(jnp.float32)
 
 
 def rttg_latency(
@@ -170,14 +182,19 @@ def rttg_latency(
     cfg,  # TrafficConfig | ScenarioParams (duck-typed)
     *,
     predict: bool,  # True = stage-2 pass (run the horizon predictor)
+    want_rid: bool = False,  # append the (N,) int32 attachment ids
     block_n: int = 256,
     interpret: bool = False,
 ):
     """Fused geometry chain -> (latency (N,) f32, connected (N,) bool).
 
-    A concrete ``TrafficConfig`` is lifted to its traced ``ScenarioParams``
-    view HERE, outside the jit boundary — the config dataclass is not a
-    pytree, so it cannot cross into the jitted wrapper as an argument.
+    ``want_rid=True`` appends the (N,) int32 attachment ids as a third
+    output (the argmin phase 1 already resolves; adding the output leaves
+    the latency/connectivity expressions untouched, so the two-output view
+    stays bitwise-frozen).  A concrete ``TrafficConfig`` is lifted to its
+    traced ``ScenarioParams`` view HERE, outside the jit boundary — the
+    config dataclass is not a pytree, so it cannot cross into the jitted
+    wrapper as an argument.
     """
     from repro.config import TrafficConfig
 
@@ -187,16 +204,17 @@ def rttg_latency(
         cfg = scenario_params(cfg)
     return _rttg_latency(
         pos, speed, accel, t, model_bytes, forced, cfg,
-        predict=predict, block_n=block_n, interpret=interpret,
+        predict=predict, want_rid=want_rid, block_n=block_n,
+        interpret=interpret,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("predict", "block_n", "interpret")
+    jax.jit, static_argnames=("predict", "want_rid", "block_n", "interpret")
 )
 def _rttg_latency(
     pos, speed, accel, t, model_bytes, forced, cfg, *,
-    predict: bool, block_n: int, interpret: bool,
+    predict: bool, want_rid: bool, block_n: int, interpret: bool,
 ):
     N = pos.shape[0]
     R = n_rsu_of(cfg)
@@ -217,8 +235,11 @@ def _rttg_latency(
     scalars = _pack_scalars(t, model_bytes, cfg)
 
     nb = (N + pad_n) // bn
-    kernel = functools.partial(_chain_kernel, N, R, n_steps, dt, horizon_s)
-    lat, conn = pl.pallas_call(
+    kernel = functools.partial(
+        _chain_kernel, N, R, n_steps, dt, horizon_s, want_rid
+    )
+    n_out = 3 if want_rid else 2
+    outs = pl.pallas_call(
         kernel,
         grid=(2, nb),
         in_specs=[
@@ -230,16 +251,18 @@ def _rttg_latency(
             pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
-            pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda p, j: (j, 0)) for _ in range(n_out)
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((N + pad_n, 1), jnp.float32),
-            jax.ShapeDtypeStruct((N + pad_n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N + pad_n, 1), jnp.float32)
+            for _ in range(n_out)
         ],
         scratch_shapes=[_scratch((1, rp))],
         interpret=interpret,
     )(scalars, mask, col(pos), col(speed), col(accel), col(forced))
+    lat, conn = outs[0], outs[1]
+    if want_rid:
+        return lat[:N, 0], conn[:N, 0] != 0.0, outs[2][:N, 0].astype(jnp.int32)
     return lat[:N, 0], conn[:N, 0] != 0.0
 
 

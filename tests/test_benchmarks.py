@@ -36,6 +36,35 @@ def test_engine_throughput_smoke_covers_catalog():
     assert len(accs) == G
     assert np.all(np.isfinite(accs))
     assert {k[1] for k in r["final_acc"]} == set(AGGREGATOR_ORDER)
+    # the fleet-scaling lane rides the same probe: two-tier RSU aggregation
+    # with chunk-streamed cohorts, every aggregator, rsu_outage included
+    h = r["hierarchical"]
+    assert h["client_block"] > 0
+    assert h["grid"] == 2 * len(AGGREGATOR_ORDER)
+    h_accs = list(h["final_acc"].values())
+    assert len(h_accs) == h["grid"]
+    assert np.all(np.isfinite(h_accs))
+    assert {k[3] for k in h["final_acc"]} == {"rush_hour", "rsu_outage"}
+
+
+def test_bench_trajectory_records_fleet_scale_run():
+    """The committed BENCH_engine.json must carry at least one fleet-scale
+    hierarchical record (``grid_shape.num_clients >= 100k``): the scaling
+    claim is trajectory data, not a one-off console line."""
+    import json
+
+    from benchmarks import engine_throughput
+
+    with open(engine_throughput.BENCH_JSON) as f:
+        runs = json.load(f)["runs"]
+    fleet = [r for r in runs
+             if r.get("grid_shape", {}).get("num_clients", 0) >= 100_000
+             and r.get("hierarchical")]
+    assert fleet, "no fleet-scale (>=100k clients) hierarchical run recorded"
+    r = fleet[-1]
+    assert r["client_block"] > 0
+    assert r["rounds_per_s"] > 0
+    assert all(np.isfinite(v) for v in r["final_acc"].values())
 
 
 def test_engine_throughput_bench_covers_aggregator_registry():

@@ -1,0 +1,300 @@
+"""Two-tier (client -> RSU -> server) aggregation: differential proofs.
+
+The fleet-scale tentpole's contract is DIFFERENTIAL — hierarchical
+aggregation is only trustworthy if it provably changes nothing where it
+must change nothing:
+
+  * headline: a round with ``fl.hierarchical=True`` (clients reduce into
+    their attached RSU, live RSUs reduce into the server) is BITWISE
+    identical to the flat lane — every ``RoundMetrics`` field AND every
+    ``RoundState`` leaf — while every RSU is live, for EVERY registered
+    aggregator and the frozen plain-fedavg registry, in BOTH dispatch
+    modes (pure-jnp ref and ``REPRO_KERNELS_INTERPRET=1``).  The identity
+    holds because the per-RSU weight masses are integer-valued sample
+    counts, so the per-RSU reassociation of the normalizer is exact
+    (``fl.server.rsu_normalized_weights``);
+  * the ``rsu_reduce`` Pallas kernel reproduces ``kernels.ref.rsu_reduce``
+    bit for bit across the padding edges (K=1 cohorts, non-multiple-of-
+    block P, a single RSU, all clients on one RSU, never-attached and
+    fully-masked RSU segments), and a k-blocked walk equals the chunk-wise
+    composition of references;
+  * the ``client_block`` streaming lane keeps round ECONOMICS (selection,
+    duration, success counts, sketches) bitwise with the unblocked
+    hierarchical lane and lands allclose parameters (the cohort sum is
+    reassociated per RSU chunk);
+  * sample-count weighting: ``rsu_normalized_weights`` equals
+    ``normalized_weights`` bitwise for ragged integer counts with all
+    RSUs live, and degrades to finite zero weights (never NaN) when dark
+    RSUs drop their partials.
+
+Tier-1 like the other differential suites.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig
+from repro.configs import get_config
+from repro.core.scenarios import scenario_config, scenario_params
+from repro.fl.aggregators import AGGREGATOR_ORDER
+from repro.fl.rounds import (
+    experiment_key,
+    flat_spec_of,
+    init_state_traced,
+    make_round_data,
+    make_round_step,
+)
+from repro.fl.server import normalized_weights, rsu_normalized_weights
+from repro.kernels import ref
+from repro.kernels.ops import pick_rsu_blocks
+from repro.kernels.rsu_reduce import rsu_reduce
+from repro.models import build_model
+from repro.sharding import split_params
+from repro.utils import tree_bytes
+
+pytestmark = pytest.mark.tier1
+
+N_CLIENTS = 12
+
+# the reference must be compared UNDER JIT: eager evaluation lacks the FMA
+# contraction jitted programs fuse, drifting ~2e-7 (same rule as the other
+# kernel parity suites)
+_REF = jax.jit(ref.rsu_reduce, static_argnums=(3,))
+
+
+def _round_env(aggregators=AGGREGATOR_ORDER, scenario="rush_hour", **fl_kw):
+    """Fresh (state, data, scn, jitted step): built per test so the kernel
+    dispatch mode active at CALL time is the one the trace bakes in."""
+    fl = FLConfig(num_clients=N_CLIENTS, samples_per_client=32, batch_size=16,
+                  num_clusters=3, local_epochs=1, **fl_kw)
+    api = build_model(get_config("fl-mnist-mlp"))
+    init_params = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config(scenario, num_vehicles=N_CLIENTS)
+    key = experiment_key("mnist", "contextual", 0)
+    state, regions = jax.jit(
+        lambda k: init_state_traced(init_params, fl, tc, k)
+    )(key)
+    data = make_round_data(key, "mnist", fl, regions)
+    spec_tree = jax.eval_shape(init_params, jax.random.key(0))
+    step = jax.jit(make_round_step(
+        api.loss, fl, fl.n_select, float(tree_bytes(spec_tree)),
+        flat_spec_of(spec_tree), ("contextual",), aggregators=aggregators,
+    ))
+    return state, data, scenario_params(tc), step
+
+
+def _assert_bitwise_tree(a, b, tag=""):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    for (path, x), y in zip(la, jax.tree_util.tree_leaves(b)):
+        if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+            x, y = jax.random.key_data(x), jax.random.key_data(y)
+        assert np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True), (
+            f"{tag}: {jax.tree_util.keystr(path)}"
+        )
+
+
+def _assert_two_tier_equals_flat(aggregators):
+    """One round per registered rule: flat vs hierarchical, everything."""
+    state, data, scn, step_flat = _round_env(aggregators)
+    _, _, _, step_hier = _round_env(aggregators, hierarchical=True)
+    si = jnp.zeros((), jnp.int32)
+    for ai, agg in enumerate(aggregators):
+        sf, mf = step_flat(state, scn, si, jnp.int32(ai), data, True)
+        sh, mh = step_hier(state, scn, si, jnp.int32(ai), data, True)
+        for name in mf._fields:
+            a, b = np.asarray(getattr(mf, name)), np.asarray(getattr(mh, name))
+            assert np.array_equal(a, b, equal_nan=True), f"{agg}: {name}"
+        _assert_bitwise_tree(sf, sh, tag=agg)
+
+
+# ---------------------------------------------------------------------------
+# headline: two-tier == flat, bitwise, per aggregator, both dispatch modes
+# ---------------------------------------------------------------------------
+def test_two_tier_equals_flat_every_aggregator_ref():
+    _assert_two_tier_equals_flat(AGGREGATOR_ORDER)
+
+
+def test_two_tier_equals_flat_plain_fedavg_ref():
+    # the frozen single-rule registry traces its own (pre-registry) path
+    _assert_two_tier_equals_flat(("fedavg",))
+
+
+def test_two_tier_equals_flat_every_aggregator_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    _assert_two_tier_equals_flat(AGGREGATOR_ORDER)
+
+
+# ---------------------------------------------------------------------------
+# client_block streaming: bitwise economics, allclose model
+# ---------------------------------------------------------------------------
+def _assert_blocked_matches_unblocked(block):
+    state, data, scn, step_u = _round_env(hierarchical=True)
+    _, _, _, step_b = _round_env(hierarchical=True, client_block=block)
+    si = jnp.zeros((), jnp.int32)
+    for ai, agg in enumerate(AGGREGATOR_ORDER):
+        su, mu_ = step_u(state, scn, si, jnp.int32(ai), data, True)
+        sb, mb_ = step_b(state, scn, si, jnp.int32(ai), data, True)
+        # economics + telemetry are computed before training from the same
+        # expressions: bitwise, including the strided eval of the params
+        # both lanes would only reach through the reduce
+        for name in ("round", "sim_time", "duration", "n_selected",
+                     "n_succeeded", "mean_pred_latency", "mean_real_latency"):
+            a = np.asarray(getattr(mu_, name))
+            b = np.asarray(getattr(mb_, name))
+            assert np.array_equal(a, b, equal_nan=True), f"{agg}: {name}"
+        # sketches are per-client quantities scattered chunk-by-chunk from
+        # the same update vectors: bitwise
+        np.testing.assert_array_equal(
+            np.asarray(su.sketches), np.asarray(sb.sketches), err_msg=agg
+        )
+        np.testing.assert_array_equal(
+            np.asarray(su.sketch_age), np.asarray(sb.sketch_age), err_msg=agg
+        )
+        # the model update reassociates the cohort sum per RSU chunk
+        for leaf in ("params", "opt_m", "opt_v"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(su, leaf)), np.asarray(getattr(sb, leaf)),
+                rtol=2e-6, atol=1e-6, err_msg=f"{agg}: {leaf}",
+            )
+
+
+def test_blocked_lane_matches_unblocked_ref():
+    _assert_blocked_matches_unblocked(block=5)
+
+
+def test_blocked_lane_matches_unblocked_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    _assert_blocked_matches_unblocked(block=5)
+
+
+def test_client_block_requires_hierarchical():
+    fl = FLConfig(num_clients=N_CLIENTS, samples_per_client=32, batch_size=16,
+                  client_block=4)
+    api = build_model(get_config("fl-mnist-mlp"))
+    spec_tree = jax.eval_shape(
+        lambda k: split_params(api.init(k))[0], jax.random.key(0)
+    )
+    with pytest.raises(ValueError, match="hierarchical"):
+        make_round_step(api.loss, fl, fl.n_select, 1.0,
+                        flat_spec_of(spec_tree), ("contextual",))
+
+
+# ---------------------------------------------------------------------------
+# rsu_reduce kernel == ref, bit for bit, across the padding edges
+# ---------------------------------------------------------------------------
+def _operands(k, p, r, seed=0, int_w=False):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    u = jax.random.normal(ks[0], (k, p), jnp.float32)
+    if int_w:
+        w = jax.random.randint(ks[1], (k,), 0, 5).astype(jnp.float32)
+    else:
+        w = jax.random.uniform(ks[1], (k,), jnp.float32)
+    rid = jax.random.randint(ks[2], (k,), 0, r)
+    return u, w, rid
+
+
+@pytest.mark.parametrize("k,p,r,mode", [
+    (1, 515, 10, "rand"),    # K=1 cohort
+    (7, 515, 10, "rand"),    # non-multiple-of-block P (block_p=256)
+    (5, 2049, 1, "rand"),    # single RSU, P one past a block edge
+    (9, 257, 6, "same"),     # every client on the same RSU
+    (8, 300, 5, "hole"),     # one RSU never attached -> exactly-zero row
+    (8, 300, 5, "masked"),   # one RSU's clients all carry weight 0
+])
+def test_rsu_reduce_kernel_matches_ref_bitwise(k, p, r, mode):
+    u, w, rid = _operands(k, p, r)
+    if mode == "same":
+        rid = jnp.full((k,), r - 1, jnp.int32)
+    elif mode == "hole":
+        rid = jnp.where(rid == 2, 3, rid)
+    elif mode == "masked":
+        w = w * (rid != 2)
+    pk, mk = rsu_reduce(u, w, rid, r, block_p=256, interpret=True)
+    pr, mr = _REF(u, w, rid, r)
+    assert pk.shape == (r, p) and mk.shape == (r,)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    if mode in ("hole", "masked"):
+        assert np.all(np.asarray(pk)[2] == 0.0)
+        assert float(mk[2]) == 0.0
+
+
+def test_rsu_reduce_k_blocked_composes_chunkwise():
+    """A k-blocked walk accumulates per-chunk contractions in k order: it
+    equals the chunk-wise composition of references bit for bit (integer
+    weights keep every partial integer-scaled), and stays allclose to the
+    single-contraction reference in general."""
+    k, p, r, bk = 16, 300, 5, 4
+    u, w, rid = _operands(k, p, r, int_w=True)
+    pk, mk = rsu_reduce(u, w, rid, r, block_p=256, block_k=bk, interpret=True)
+    acc = jnp.zeros((r, p), jnp.float32)
+    macc = jnp.zeros((r,), jnp.float32)
+    for i in range(0, k, bk):
+        pc, mc = _REF(u[i:i + bk], w[i:i + bk], rid[i:i + bk], r)
+        acc, macc = acc + pc, macc + mc
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(acc))
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(macc))
+    pr, mr = _REF(u, w, rid, r)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(pr),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pick_rsu_blocks_invariant():
+    from repro.kernels.ops import FEDAVG_VMEM_BUDGET, _BLOCK_P_MIN
+    for (k, p, r) in [(1, 100, 1), (100, 50_000, 10), (4096, 1_000_000, 100),
+                      (100_000, 8_000, 10), (37, 515, 257)]:
+        bk, bp = pick_rsu_blocks(k, p, r)
+        rp = max(_BLOCK_P_MIN, -(-r // _BLOCK_P_MIN) * _BLOCK_P_MIN)
+        assert (bk + rp) * bp * 4 <= FEDAVG_VMEM_BUDGET, (k, p, r, bk, bp)
+        assert 1 <= bk <= k
+
+
+# ---------------------------------------------------------------------------
+# weight routing: per-RSU masses vs the flat normalizer
+# ---------------------------------------------------------------------------
+def test_rsu_weights_bitwise_with_flat_for_integer_counts():
+    """Ragged integer sample counts, every RSU live: aggregating masses
+    per-RSU before the server normalization must NOT change a single bit —
+    the regression that keeps sample-count-weighted FedAvg identical
+    between the flat and hierarchical lanes."""
+    n, r = 13, 7
+    ks = jax.random.split(jax.random.key(1), 3)
+    counts = jax.random.randint(ks[0], (n,), 1, 9).astype(jnp.float32)
+    mask = jax.random.bernoulli(ks[1], 0.6, (n,))
+    rid = jax.random.randint(ks[2], (n,), 0, r)
+    live = jnp.ones((r,), bool)
+    w_flat = jax.jit(normalized_weights)(mask, counts)
+    w_hier, mass, total = jax.jit(
+        rsu_normalized_weights, static_argnums=(4,)
+    )(mask, counts, rid, live, r)
+    np.testing.assert_array_equal(np.asarray(w_flat), np.asarray(w_hier))
+    # the live-mass normalizer IS the flat sum, exactly
+    assert float(total) == float(jnp.sum(mask * counts))
+    assert float(jnp.sum(mass)) == float(total)
+
+
+def test_dark_rsu_drops_partial_without_nan():
+    n, r = 10, 5
+    ks = jax.random.split(jax.random.key(2), 2)
+    counts = jnp.full((n,), 4.0)
+    mask = jnp.ones((n,), bool)
+    live = jnp.asarray([True, False, True, True, False])
+    # the attachment argmin only ever picks live RSUs
+    rid = jax.random.choice(ks[0], jnp.asarray([0, 2, 3]), (n,))
+    w, mass, total = jax.jit(
+        rsu_normalized_weights, static_argnums=(4,)
+    )(mask, counts, rid, live, r)
+    assert bool(jnp.all(jnp.isfinite(w)))
+    assert float(mass[1]) == 0.0 and float(mass[4]) == 0.0
+    assert float(total) == float(n * 4.0)
+    # every RSU dark (attachment contract broken on purpose): weights
+    # degrade to exact zeros, never NaN
+    w0, _, t0 = jax.jit(rsu_normalized_weights, static_argnums=(4,))(
+        jnp.zeros((n,), bool), counts, rid, live, r
+    )
+    assert float(t0) >= 0.0 and bool(jnp.all(w0 == 0.0))

@@ -104,12 +104,15 @@ def test_pytree_leaves_are_exactly_the_traced_fields():
 _ROUND_ENV: dict = {}
 
 
-def round_env():
-    """One compiled round_step + fixed init, reused across all draws (the
-    scenario is a traced argument, so no draw ever retraces).  A memoized
-    helper rather than a pytest fixture: the hypothesis fallback shim wraps
-    tests with an empty signature, which hides fixture requests."""
-    if "v" not in _ROUND_ENV:
+def round_env(mode="flat"):
+    """One compiled round_step + fixed init per aggregation MODE, reused
+    across all draws (the scenario is a traced argument, so no draw ever
+    retraces).  ``mode``: "flat" (the historical env) or "hierarchical"
+    (two-tier RSU aggregation WITH chunk-streamed cohorts — the fleet
+    scaling path, exercised here at toy size).  A memoized helper rather
+    than a pytest fixture: the hypothesis fallback shim wraps tests with an
+    empty signature, which hides fixture requests."""
+    if mode not in _ROUND_ENV:
         from repro.fl.aggregators import AGGREGATOR_ORDER
         from repro.fl.engine import ExperimentEngine
         from repro.fl.rounds import (
@@ -118,44 +121,32 @@ def round_env():
             make_round_data,
         )
 
+        fl = FL if mode == "flat" else dataclasses.replace(
+            FL, hierarchical=True, client_block=3
+        )
         # the engine compiles the FULL aggregator registry so every draw
         # can sweep every registered server optimizer (the aggregator is a
         # traced switch index — no retrace per rule)
-        eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+        eng = ExperimentEngine(MLP, fl, "mnist", strategies=("contextual",),
                                aggregators=AGGREGATOR_ORDER)
         eng._ensure_spec()
         tc0 = scenario_config("ring", num_vehicles=N_CLIENTS)
         key = experiment_key("mnist", "contextual", 0)
-        state, regions = init_state_traced(eng._init_params, FL, tc0, key)
-        data = make_round_data(key, "mnist", FL, regions)
+        state, regions = init_state_traced(eng._init_params, fl, tc0, key)
+        data = make_round_data(key, "mnist", fl, regions)
         step = jax.jit(lambda s, scn, ai: eng._round_step(
             s, scn, jnp.zeros((), jnp.int32), ai, data, True
         ))
-        _ROUND_ENV["v"] = (state, step, len(AGGREGATOR_ORDER))
-    return _ROUND_ENV["v"]
+        _ROUND_ENV[mode] = (state, step, len(AGGREGATOR_ORDER))
+    return _ROUND_ENV[mode]
 
 
-@settings(max_examples=2, deadline=None)
-@given(
-    mean_speed=st.floats(3.0, 40.0),
-    speed_std=st.floats(0.0, 8.0),
-    accel_std=st.floats(0.05, 2.5),
-    ou_theta=st.floats(0.05, 1.0),
-    rush_amp=st.floats(0.0, 4.0),
-    outage=st.floats(0.0, 0.8),
-    coupling=st.floats(0.0, 1.0),
-    truck=st.floats(0.0, 0.5),
-    bus=st.floats(0.0, 0.4),
-    day_amp=st.floats(0.0, 4.0),
-)
-def test_round_step_finite_for_every_scenario(
-    mean_speed, speed_std, accel_std, ou_theta,
-    rush_amp, outage, coupling, truck, bus, day_amp,
-):
+def _sweep_finite(mode, mean_speed, speed_std, accel_std, ou_theta,
+                  rush_amp, outage, coupling, truck, bus, day_amp):
     # every draw sweeps EVERY registered scenario x EVERY registered
     # aggregator: new catalog/registry entries are property-tested the
     # moment they are registered
-    state, step, n_aggs = round_env()
+    state, step, n_aggs = round_env(mode)
     for scenario in sorted(SCENARIOS):
         tc = scenario_config(scenario, num_vehicles=N_CLIENTS)
         tc = dataclasses.replace(
@@ -191,3 +182,38 @@ def test_round_step_finite_for_every_scenario(
                     f"{tag}: non-finite twin.{name}"
                 )
             assert int(metrics.n_succeeded) <= int(metrics.n_selected)
+            if mode == "hierarchical":
+                # a dark RSU (rsu_outage draws reach 80% corridor outage)
+                # must DROP its partial, never poison the sketches/model
+                assert bool(jnp.all(jnp.isfinite(new_state.sketches))), (
+                    f"{tag}: non-finite sketches"
+                )
+
+
+_FINITE_DRAWS = dict(
+    mean_speed=st.floats(3.0, 40.0),
+    speed_std=st.floats(0.0, 8.0),
+    accel_std=st.floats(0.05, 2.5),
+    ou_theta=st.floats(0.05, 1.0),
+    rush_amp=st.floats(0.0, 4.0),
+    outage=st.floats(0.0, 0.8),
+    coupling=st.floats(0.0, 1.0),
+    truck=st.floats(0.0, 0.5),
+    bus=st.floats(0.0, 0.4),
+    day_amp=st.floats(0.0, 4.0),
+)
+
+
+@settings(max_examples=2, deadline=None)
+@given(**_FINITE_DRAWS)
+def test_round_step_finite_for_every_scenario(**kw):
+    _sweep_finite("flat", **kw)
+
+
+@settings(max_examples=2, deadline=None)
+@given(**_FINITE_DRAWS)
+def test_round_step_finite_hierarchical_for_every_scenario(**kw):
+    # the fleet-scale path at toy size: two-tier RSU weight routing PLUS
+    # chunk-streamed cohorts (client_block=3 over the K-slot cohort), swept
+    # across the full scenario catalog and aggregator registry
+    _sweep_finite("hierarchical", **kw)
