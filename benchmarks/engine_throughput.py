@@ -54,7 +54,7 @@ SCENARIOS = (
 # the FULL server-optimizer registry (tests/test_benchmarks.py guards this
 # against fl.aggregators.AGGREGATOR_ORDER): the --smoke probe sweeps it as
 # a grid axis so a registered-but-unbenched rule cannot dodge tier-1
-AGGREGATORS = ("fedavg", "fedavgm", "fedadam", "fedyogi", "stale")
+AGGREGATORS = ("fedavg", "fedavgm", "fedadam", "fedyogi", "stale", "fedbuff")
 # the TIMED reference grid keeps the single-fedavg axis: its 24-run shape
 # is what `steady_speedup_vs_previous` compares across PRs, and the serial
 # legacy baseline runs plain FedAvg — the aggregator axis' throughput is
@@ -100,7 +100,13 @@ def record_run(result: dict, label: str, path: str = BENCH_JSON) -> dict:
     doc.setdefault("runs", []).append(entry)
     if len(doc["runs"]) >= 2:
         prev, cur = doc["runs"][-2], doc["runs"][-1]
-        if prev.get("grid") == cur.get("grid") and prev.get("batched_s"):
+        # only chain the trajectory across LIKE runs: same grid size AND
+        # the same aggregator axis — a fedbuff async-lane entry adjacent
+        # to a fedavg reference entry is a different program, not a
+        # regression signal
+        if (prev.get("grid") == cur.get("grid")
+                and prev.get("aggregators") == cur.get("aggregators")
+                and prev.get("batched_s") and cur.get("batched_s")):
             cur["steady_speedup_vs_previous"] = (
                 prev["batched_s"] / cur["batched_s"]
             )
@@ -261,6 +267,61 @@ def fleet(num_clients=100_000, rounds=2, block=32, samples=2, label=None):
     return r
 
 
+def async_lane(num_clients=20, samples=64, label=None):
+    """Timed async-rounds (``fedbuff``) lane on the reference 24-run grid.
+
+    Same grid geometry as the reference sweep — 3 strategies x 1 seed x
+    the full scenario catalog — but the aggregator axis is the buffered
+    ``fedbuff`` rule under CR=0.7, so every round carries the ``(Kb, P)``
+    in-flight ring buffer through the scan and folds drained deltas into
+    the augmented ``server_update_buffered`` contraction.  The recorded
+    entry (``async_lane: true``, ``aggregators: ["fedbuff"]``) tracks the
+    buffer's steady-state overhead against the plain reference entries;
+    ``record_run`` only chains ``steady_speedup_vs_previous`` across
+    LIKE-aggregator runs, so this lane never pollutes the fedavg
+    trajectory.
+    """
+    import dataclasses
+
+    from repro.fl.engine import ExperimentEngine
+
+    model, fl = _grid_cfgs(num_clients, samples)
+    fl = dataclasses.replace(fl, connection_rate=0.7)
+    eng = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES,
+                           aggregators=("fedbuff",))
+
+    def sweep():
+        res = eng.run_grid(seeds=SEEDS, scenarios=SCENARIOS, rounds=ROUNDS,
+                           eval_every=EVAL_EVERY)
+        jax.block_until_ready(res.metrics)
+
+    t_cold = _timed(sweep)
+    t_steady = min(_timed(sweep) for _ in range(2))
+    n_total = len(STRATEGIES) * len(SEEDS) * len(SCENARIOS) * ROUNDS
+    r = {
+        "grid": len(STRATEGIES) * len(SEEDS) * len(SCENARIOS),
+        "grid_shape": {"strategies": len(STRATEGIES), "aggregators": 1,
+                       "seeds": len(SEEDS), "scenarios": len(SCENARIOS),
+                       "num_clients": num_clients},
+        "aggregators": ["fedbuff"],
+        "async_lane": True,
+        "connection_rate": 0.7,
+        "num_clients": num_clients,
+        "samples_per_client": samples,
+        "rounds_per_experiment": ROUNDS,
+        "total_rounds": n_total,
+        "n_devices": len(jax.devices()),
+        "batched_cold_s": t_cold,
+        "batched_s": t_steady,
+        "batched_rounds_per_s": n_total / t_steady,
+    }
+    entry = record_run(r, label or "async-lane")
+    print(f"engine-async,grid={r['grid']}x{ROUNDS}r,cr=0.7,"
+          f"batched={r['batched_rounds_per_s']:.2f}r/s,"
+          f"cold={t_cold:.1f}s,label={entry['label']}")
+    return r
+
+
 def smoke(num_clients=8, samples=32):
     """1-round, tiny-grid sweep down the ENTIRE engine throughput path.
 
@@ -312,13 +373,17 @@ def smoke(num_clients=8, samples=32):
 
 
 def main(num_clients=None, samples=None, smoke_mode=False, label=None,
-         fleet_clients=None):
+         fleet_clients=None, async_mode=False):
     # per-mode defaults: the probe stays tiny, the timed bench keeps its
     # reference 24-run grid; explicit sizes pass through to either mode.
     # ``fleet_clients`` (--clients) selects the fleet-scale hierarchical
-    # run instead of the timed reference grid.
+    # run and ``async_mode`` (--async-lane) the fedbuff lane instead of
+    # the timed reference grid.
     if smoke_mode:
         return smoke(num_clients=num_clients or 8, samples=samples or 32)
+    if async_mode:
+        return async_lane(num_clients=num_clients or 20,
+                          samples=samples or 64, label=label)
     if fleet_clients:
         return fleet(num_clients=fleet_clients, label=label)
     if os.environ.get("REPRO_BENCH_CACHED_ONLY"):
@@ -357,7 +422,11 @@ if __name__ == "__main__":
     ap.add_argument("--clients", type=int, default=None,
                     help="fleet-scale hierarchical run at this many clients "
                          "(two-tier RSU aggregation, chunk-streamed cohorts)")
+    ap.add_argument("--async-lane", action="store_true", dest="async_lane",
+                    help="timed fedbuff (buffered async rounds) lane on the "
+                         "reference grid at CR=0.7")
     ap.add_argument("--label", default=None,
                     help="label recorded with this run in BENCH_engine.json")
     args = ap.parse_args()
-    main(smoke_mode=args.smoke, label=args.label, fleet_clients=args.clients)
+    main(smoke_mode=args.smoke, label=args.label, fleet_clients=args.clients,
+         async_mode=args.async_lane)

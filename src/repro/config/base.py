@@ -319,7 +319,37 @@ class FLConfig:
     # path (cohorts never materialize a full (K, P) update matrix).
     hierarchical: bool = False
     client_block: int = 0
+    # FedBuff-style async rounds (the ``fedbuff`` aggregator lane): a
+    # fixed-size in-flight delta ring buffer rides ``RoundState`` so a
+    # selected client that misses the deadline lands its update in a LATER
+    # round with its realized staleness.  ``buffer_size`` is the static
+    # slot count (the buffer leaves exist — as inert zeros — even when no
+    # grid lane runs fedbuff); ``buffer_fill`` is the traced arrival
+    # threshold that must be reached before the server drains the buffer.
+    # Setting ``buffer_fill >= cohort size`` disables draining entirely,
+    # which is the differential-contract configuration (fedbuff == fedavg
+    # bitwise while nobody misses a deadline).
+    buffer_size: int = 8
+    buffer_fill: int = 1
     seed: int = 0
+
+    def __post_init__(self):
+        if self.round_timeout_s <= 0:
+            raise ValueError(
+                "round_timeout_s must be positive: the staleness discount "
+                "timeout / (timeout + lateness) degenerates to 0/0 = NaN at "
+                f"a non-positive deadline, got {self.round_timeout_s!r}"
+            )
+        if self.buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1 (the in-flight delta ring buffer "
+                f"is fixed-shape), got {self.buffer_size!r}"
+            )
+        if self.buffer_fill < 1:
+            raise ValueError(
+                f"buffer_fill must be >= 1 (the server drains the buffer "
+                f"only once this many deltas arrived), got {self.buffer_fill!r}"
+            )
 
     @property
     def n_select(self) -> int:

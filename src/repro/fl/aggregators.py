@@ -41,9 +41,10 @@ import jax.numpy as jnp
 
 # lax.switch branch order: the traced aggregator axis indexes this tuple.
 AGGREGATOR_ORDER: Tuple[str, ...] = (
-    "fedavg", "fedavgm", "fedadam", "fedyogi", "stale"
+    "fedavg", "fedavgm", "fedadam", "fedyogi", "stale", "fedbuff"
 )
 STALE_IDX = AGGREGATOR_ORDER.index("stale")
+FEDBUFF_IDX = AGGREGATOR_ORDER.index("fedbuff")
 
 
 class ServerHP(NamedTuple):
@@ -121,7 +122,18 @@ def _stale(hp: ServerHP, opt, params, delta, rnd):
     return opt, params + delta
 
 
-_RULES = (_fedavg, _fedavgm, _fedadam, _fedyogi, _stale)
+def _fedbuff(hp: ServerHP, opt, params, delta, rnd):
+    """FedBuff-style async rounds (Nguyen et al., *Federated Learning with
+    Buffered Asynchronous Aggregation*): deadline-missing stragglers park
+    their update in the ``RoundState`` ring buffer and land it in a LATER
+    round with a ``staleness_scale`` discount of their realized lateness.
+    The round core folds the in-round survivor reduce and the drained
+    buffer slots into ``delta`` (weight-space, like ``stale``), so the
+    parameter rule stays fedavg's AXPY and composes with any moment rule."""
+    return opt, params + delta
+
+
+_RULES = (_fedavg, _fedavgm, _fedadam, _fedyogi, _stale, _fedbuff)
 assert len(_RULES) == len(AGGREGATOR_ORDER)
 
 
@@ -148,6 +160,15 @@ def staleness_scale(per_slot, timeout):
 
     — the (1 + staleness)^-1 polynomial schedule of FedAsync (Xie et al.)
     with staleness measured in deadline units.  Survivors keep weight 1;
-    the round core applies this only under the ``stale`` rule.
+    the round core applies this under the ``stale`` rule (same-round
+    discount) and to drained ``fedbuff`` ring-buffer slots (the realized
+    cross-round lateness).
+
+    The denominator is guarded: ``FLConfig`` rejects non-positive
+    ``round_timeout_s``, but a caller passing ``timeout == per_slot == 0``
+    directly would otherwise hit 0/0 = NaN — the guard degrades that to an
+    exact 0 weight instead, and is bitwise-neutral for every positive
+    denominator (``max(x, tiny)`` is the identity on normal positives).
     """
-    return timeout / (timeout + per_slot)
+    denom = timeout + per_slot
+    return timeout / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)

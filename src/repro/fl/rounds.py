@@ -95,6 +95,7 @@ from repro.core.trajectory import predict_rttg
 from repro.core.twin import advance_twin, init_twin_state
 from repro.fl.aggregators import (
     AGGREGATOR_ORDER,
+    FEDBUFF_IDX,
     STALE_IDX,
     init_opt_vectors,
     server_hp,
@@ -114,6 +115,7 @@ from repro.kernels.ops import (
     rsu_reduce_auto,
     rttg_latency_auto,
     server_update_auto,
+    server_update_buffered_auto,
 )
 from repro.sharding import split_params
 from repro.utils import flatten_to_vector, fold_in_str, unflatten_from_vector
@@ -137,6 +139,15 @@ class RoundState(NamedTuple):
     Rademacher projection signs) carried here so the rounds scan never
     re-draws a P-long Bernoulli — XLA cannot hoist it out of the scan
     body on its own.
+
+    The ``buf_*`` leaves are the FedBuff-style in-flight delta ring buffer
+    (the ``fedbuff`` aggregator lane): ``Kb = FLConfig.buffer_size`` fixed
+    slots holding the raw update vectors of deadline-missing stragglers,
+    plus per-slot arrival time (absolute sim seconds), dispatch time (the
+    staleness base), sample-count weight and an occupancy mask.  All
+    fixed-shape and mask-based, so they join the donated scan carry and
+    vmap/shard like every other leaf; lanes running any other rule carry
+    them through as inert zeros.
     """
 
     params: jax.Array  # (P,) flat fp32 global model vector
@@ -147,6 +158,11 @@ class RoundState(NamedTuple):
     sketch_age: jax.Array  # (N,) rounds since last report
     clusters: jax.Array  # (N,) int32 data-cluster labels
     sketch_sign: jax.Array  # (P padded,) Rademacher signs (per-experiment const)
+    buf_delta: jax.Array  # (Kb, P) in-flight straggler deltas (fedbuff)
+    buf_arrive: jax.Array  # (Kb,) f32 absolute arrival sim_time per slot
+    buf_sent: jax.Array  # (Kb,) f32 dispatch sim_time (staleness base)
+    buf_weight: jax.Array  # (Kb,) f32 sample-count weight at dispatch
+    buf_mask: jax.Array  # (Kb,) bool slot occupancy
     round: jax.Array  # () int32 completed-round counter
     sim_time: jax.Array  # () f32 cumulative simulated seconds
     key: jax.Array  # per-experiment base PRNG key (never advanced)
@@ -175,6 +191,8 @@ class RoundMetrics(NamedTuple):
     duration: jax.Array
     n_selected: jax.Array
     n_succeeded: jax.Array
+    n_buffered: jax.Array  # int32: stragglers parked in the fedbuff buffer
+    n_drained: jax.Array  # int32: buffer slots landed in this server step
     mean_pred_latency: jax.Array
     mean_real_latency: jax.Array
     test_acc: jax.Array
@@ -194,6 +212,8 @@ class RoundRecord:
     mean_real_latency: float
     test_acc: float
     test_loss: float
+    n_buffered: int = 0  # fedbuff: stragglers parked this round
+    n_drained: int = 0  # fedbuff: buffer slots landed this round
 
 
 def cohort_size_for(fl: FLConfig, strategies: Sequence[str]) -> int:
@@ -294,6 +314,12 @@ def init_state_traced(
         sketch_age=jnp.full((N,), jnp.inf, jnp.float32),
         clusters=jnp.zeros((N,), jnp.int32),
         sketch_sign=sketch_sign,
+        buf_delta=jnp.zeros((fl.buffer_size, params_vec.shape[0]),
+                            jnp.float32),
+        buf_arrive=jnp.zeros((fl.buffer_size,), jnp.float32),
+        buf_sent=jnp.zeros((fl.buffer_size,), jnp.float32),
+        buf_weight=jnp.zeros((fl.buffer_size,), jnp.float32),
+        buf_mask=jnp.zeros((fl.buffer_size,), bool),
         round=jnp.zeros((), jnp.int32),
         sim_time=jnp.zeros((), jnp.float32),
         key=key,
@@ -452,6 +478,15 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
         [AGGREGATOR_ORDER.index(a) for a in aggregators], jnp.int32
     )
     plain_fedavg = aggregators == ("fedavg",)
+    # fedbuff lanes carry the in-flight delta ring buffer (RoundState.buf_*)
+    # through the server step; registries without it keep the unbuffered
+    # kernel (and the buffer leaves ride the carry as inert zeros)
+    has_fedbuff = "fedbuff" in aggregators
+    Kb = int(fl.buffer_size)
+    buffer_fill = int(fl.buffer_fill)
+    # the buffered kernel's working set adds the (Kb, block_p) buffer tile
+    # to the cohort tile — budget the extra rows so the VMEM invariant holds
+    buf_rows = Kb if has_fedbuff else 0
     hp = server_hp(fl)
     trainer = make_local_trainer(
         loss_fn, fl.learning_rate, fl.local_epochs, fl.batch_size,
@@ -642,6 +677,51 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             # the module docstring for how far that identity extends)
             upd_any = jnp.where(is_stale, n_selected > 0, ok_any)
 
+        # ---- fedbuff: drain arrived buffer slots, place new stragglers -
+        # All mask-based on the fixed (Kb,) slot axis: which occupied slots
+        # have ARRIVED by round end drains into the server step (discounted
+        # by realized cross-round lateness, gated on the fill threshold);
+        # this round's deadline-missers compact into the freed slots.
+        if has_fedbuff:
+            is_fedbuff = gidx == FEDBUFF_IDX
+            end_time = state.sim_time + duration
+            arrived = state.buf_mask & (state.buf_arrive <= end_time)
+            n_arrived = jnp.sum(arrived).astype(jnp.int32)
+            drain_fire = is_fedbuff & (n_arrived >= buffer_fill)
+            disc_b = staleness_scale(
+                jnp.maximum(end_time - state.buf_sent, 0.0), timeout
+            )
+            # normalize by the UNDISCOUNTED drained mass (the same 1e-9
+            # guard as normalized_weights) so the staleness discount
+            # genuinely shrinks the step instead of cancelling out
+            mass_b = jnp.sum(jnp.where(arrived, state.buf_weight, 0.0))
+            bw = jnp.where(
+                drain_fire & arrived,
+                state.buf_weight * disc_b / jnp.maximum(mass_b, 1e-9),
+                0.0,
+            )
+            keep = state.buf_mask & ~(drain_fire & arrived)
+            # free-slot compaction: the i-th straggler takes the i-th free
+            # slot; ranks beyond the free capacity gather values >= Kb and
+            # the scatters below drop them (newest-overflow-dropped policy)
+            strag = slot_valid & ~ok & is_fedbuff
+            free_order = jnp.sort(
+                jnp.where(keep, Kb + jnp.arange(Kb), jnp.arange(Kb))
+            )
+            rank = jnp.cumsum(strag) - 1
+            slot = jnp.where(
+                strag & (rank < Kb),
+                free_order[jnp.clip(rank, 0, Kb - 1)],
+                2 * Kb,
+            )
+            n_buffered = jnp.sum(strag & (slot < Kb)).astype(jnp.int32)
+            n_drained = jnp.where(drain_fire, n_arrived, 0).astype(jnp.int32)
+            # a drain with zero in-round survivors is still a server step
+            upd_any = jnp.where(is_fedbuff, ok_any | drain_fire, upd_any)
+        else:
+            n_buffered = jnp.zeros((), jnp.int32)
+            n_drained = jnp.zeros((), jnp.int32)
+
         # ---- local training + edge reduce ------------------------------
         params = unflatten_from_vector(state.params, param_spec)
         if client_block:
@@ -676,10 +756,18 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                 _pad_k(ok, False).reshape(nC, B),
                 keys_all.reshape(nC, B),
             )
+            if has_fedbuff:
+                # ring-buffer slot per cohort position (>= Kb drops);
+                # padding chunks scatter nowhere
+                xs = xs + (_pad_k(slot, 2 * Kb).reshape(nC, B),)
 
             def _chunk(carry, xs_c):
-                partials, sketches, sketch_age = carry
-                i_c, v_c, w_c, r_c, ok_c, k_c = xs_c
+                if has_fedbuff:
+                    partials, sketches, sketch_age, buf = carry
+                    i_c, v_c, w_c, r_c, ok_c, k_c, s_c = xs_c
+                else:
+                    partials, sketches, sketch_age = carry
+                    i_c, v_c, w_c, r_c, ok_c, k_c = xs_c
                 if data_idx is None:
                     imgs_c = data.images[i_c]
                     lbls_c = data.labels[i_c]
@@ -698,19 +786,31 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                 scat = jnp.where(ok_c, i_c, N)  # out-of-bounds rows drop
                 sketches = sketches.at[scat].set(sks_c, mode="drop")
                 sketch_age = sketch_age.at[scat].set(0.0, mode="drop")
+                if has_fedbuff:
+                    # straggler updates park in the ring buffer (vb is
+                    # already zero-masked on padding slots)
+                    buf = buf.at[s_c].set(vb, mode="drop")
+                    return (partials + part_c, sketches, sketch_age, buf), None
                 return (partials + part_c, sketches, sketch_age), None
 
-            (partials, sketches, sketch_age), _ = jax.lax.scan(
-                _chunk,
-                (jnp.zeros((R, P), jnp.float32), state.sketches,
-                 state.sketch_age),
-                xs,
-            )
+            carry0 = (jnp.zeros((R, P), jnp.float32), state.sketches,
+                      state.sketch_age)
+            if has_fedbuff:
+                carry0 = carry0 + (
+                    jnp.where(keep[:, None], state.buf_delta, 0.0),
+                )
+                (partials, sketches, sketch_age, buf_delta), _ = jax.lax.scan(
+                    _chunk, carry0, xs
+                )
+            else:
+                (partials, sketches, sketch_age), _ = jax.lax.scan(
+                    _chunk, carry0, xs
+                )
             sketch_age = sketch_age + 1.0
             # server tier: R live partials (weights already folded in at
             # the edge) reduce through the same fused flat pass
             red, red_w, bp = partials, live.astype(jnp.float32), \
-                pick_block_p(R, P)
+                pick_block_p(R + buf_rows, P)
         else:
             if data_idx is None:
                 imgs, lbls = data.images[idx_c], data.labels[idx_c]
@@ -730,7 +830,14 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             scatter = jnp.where(ok, idx_c, N)  # out-of-bounds rows drop
             sketches = state.sketches.at[scatter].set(sks, mode="drop")
             sketch_age = state.sketch_age.at[scatter].set(0.0, mode="drop") + 1.0
-            red, red_w, bp = vecs, w, pick_block_p(K, P)
+            if has_fedbuff:
+                # straggler updates park in the ring buffer: drained slots
+                # zero out, this round's deadline-missers scatter into the
+                # freed slots (slot >= Kb rows drop)
+                buf_delta = jnp.where(
+                    keep[:, None], state.buf_delta, 0.0
+                ).at[slot].set(vecs, mode="drop")
+            red, red_w, bp = vecs, w, pick_block_p(K + buf_rows, P)
 
         # ---- server update over deadline survivors (one fused flat pass)
         if plain_fedavg:
@@ -739,6 +846,20 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                 upd_any, apply_delta_flat(state.params, delta), state.params
             )
             opt_m, opt_v = state.opt_m, state.opt_v
+        elif has_fedbuff:
+            # every lane of a fedbuff-bearing registry routes through the
+            # buffered kernel: drain=False passes the unbuffered delta
+            # through bitwise, so non-fedbuff lanes are unchanged.  The
+            # PRE-scatter buffer is reduced — bw is nonzero only on slots
+            # drained this round.
+            new_p, new_m, new_v = server_update_buffered_auto(
+                red, red_w, state.buf_delta, bw, state.params, state.opt_m,
+                state.opt_v, gidx, state.round, drain_fire, eta=hp.eta,
+                beta1=hp.beta1, beta2=hp.beta2, tau=hp.tau, block_p=bp,
+            )
+            params_vec = jnp.where(upd_any, new_p, state.params)
+            opt_m = jnp.where(upd_any, new_m, state.opt_m)
+            opt_v = jnp.where(upd_any, new_v, state.opt_v)
         else:
             new_p, new_m, new_v = server_update_auto(
                 red, red_w, state.params, state.opt_m, state.opt_v, gidx,
@@ -748,6 +869,28 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             params_vec = jnp.where(upd_any, new_p, state.params)
             opt_m = jnp.where(upd_any, new_m, state.opt_m)
             opt_v = jnp.where(upd_any, new_v, state.opt_v)
+
+        # ---- fedbuff: ring-buffer metadata follows the delta scatter ---
+        if has_fedbuff:
+            # a parked straggler's update is modeled as landing one full
+            # deadline later (or its realized round time, if even slower)
+            arrive_k = state.sim_time + jnp.maximum(per_slot, timeout)
+            buf_arrive = jnp.where(
+                keep, state.buf_arrive, 0.0
+            ).at[slot].set(arrive_k, mode="drop")
+            buf_sent = jnp.where(
+                keep, state.buf_sent, 0.0
+            ).at[slot].set(jnp.broadcast_to(state.sim_time, (K,)), mode="drop")
+            buf_weight = jnp.where(
+                keep, state.buf_weight, 0.0
+            ).at[slot].set(counts_k, mode="drop")
+            buf_mask = keep.at[slot].set(jnp.ones((K,), bool), mode="drop")
+        else:
+            buf_delta = state.buf_delta
+            buf_arrive = state.buf_arrive
+            buf_sent = state.buf_sent
+            buf_weight = state.buf_weight
+            buf_mask = state.buf_mask
 
         # ---- advance the twin to round end -----------------------------
         base = jax.tree_util.tree_map(
@@ -788,6 +931,8 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             duration=duration,
             n_selected=n_selected,
             n_succeeded=jnp.sum(ok).astype(jnp.int32),
+            n_buffered=n_buffered,
+            n_drained=n_drained,
             mean_pred_latency=jnp.where(
                 n_selected > 0, jnp.sum(jnp.where(mask, lat_pred, 0.0)) / nsel_f, nan
             ),
@@ -807,6 +952,11 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             sketches=sketches,
             sketch_age=sketch_age,
             clusters=clusters,
+            buf_delta=buf_delta,
+            buf_arrive=buf_arrive,
+            buf_sent=buf_sent,
+            buf_weight=buf_weight,
+            buf_mask=buf_mask,
             round=new_round,
             sim_time=sim_time,
         )
@@ -829,6 +979,8 @@ def metrics_to_records(metrics: RoundMetrics) -> list:
                 duration=float(m.duration[i]),
                 n_selected=int(m.n_selected[i]),
                 n_succeeded=int(m.n_succeeded[i]),
+                n_buffered=int(m.n_buffered[i]),
+                n_drained=int(m.n_drained[i]),
                 mean_pred_latency=float(m.mean_pred_latency[i]),
                 mean_real_latency=float(m.mean_real_latency[i]),
                 test_acc=float(m.test_acc[i]),

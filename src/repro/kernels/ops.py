@@ -35,7 +35,7 @@ from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.pairwise_cosine import pairwise_cosine
 from repro.kernels.rsu_reduce import rsu_reduce
 from repro.kernels.rttg_latency import rttg_latency
-from repro.kernels.server_update import server_update
+from repro.kernels.server_update import server_update, server_update_buffered
 from repro.kernels.ssd_scan import ssd_scan
 from repro.kernels.swa_decode import swa_decode
 
@@ -45,6 +45,7 @@ __all__ = [
     "rsu_reduce",
     "rttg_latency",
     "server_update",
+    "server_update_buffered",
     "swa_decode",
     "ssd_scan",
     "pairwise_cosine_auto",
@@ -52,6 +53,7 @@ __all__ = [
     "rsu_reduce_auto",
     "rttg_latency_auto",
     "server_update_auto",
+    "server_update_buffered_auto",
     "swa_decode_auto",
     "ssd_scan_auto",
     "pick_block_p",
@@ -186,6 +188,33 @@ def server_update_auto(updates, weights, params, m, v, agg_idx, rnd, *,
     return server_update(updates, weights, params, m, v, agg_idx, rnd,
                          eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                          interpret=mode == "interpret", **kw)
+
+
+def server_update_buffered_auto(updates, weights, buf, buf_w, params, m, v,
+                                agg_idx, rnd, drain, *, eta, beta1, beta2,
+                                tau, **kw):
+    """Fused buffered server update (async ``fedbuff`` rounds) dispatch.
+
+    Tile policy: the working set adds the (Kb, block_p) ring-buffer tile to
+    the (K, block_p) update tile, so the budget treats the cohort as
+    ``K + Kb`` rows — ``pick_block_p(K + Kb, P)`` keeps the VMEM invariant
+    whatever the buffer depth.
+    """
+    mode = _mode()
+    if mode == "ref":
+        return ref.server_update_buffered(
+            updates, weights, buf, buf_w, params, m, v, agg_idx, rnd, drain,
+            eta=eta, beta1=beta1, beta2=beta2, tau=tau,
+        )
+    kw.setdefault(
+        "block_p", pick_block_p(updates.shape[0] + buf.shape[0],
+                                updates.shape[1])
+    )
+    return server_update_buffered(
+        updates, weights, buf, buf_w, params, m, v, agg_idx, rnd, drain,
+        eta=eta, beta1=beta1, beta2=beta2, tau=tau,
+        interpret=mode == "interpret", **kw,
+    )
 
 
 def rttg_latency_auto(pos, speed, accel, t, model_bytes, forced, cfg, *,

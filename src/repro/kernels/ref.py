@@ -69,6 +69,43 @@ def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
     return p2, m2, v2
 
 
+def server_update_buffered(updates, weights, buf, buf_w, params, m, v,
+                           agg_idx, rnd, drain, *,
+                           eta=1.0, beta1=0.9, beta2=0.99, tau=1e-3):
+    """Fused buffered server update oracle -> (params', m', v'), (P,) fp32.
+
+    THE unfused composition of the async-rounds (``fedbuff``) server step:
+    ONE ``fedavg_reduce`` contraction over the cohort rows with the
+    ``(Kb, P)`` in-flight delta ring buffer appended, the buffer's
+    drained-slot weights gated by the traced ``drain`` flag in WEIGHT
+    space, then ``fl.aggregators.apply_rule``.  A single augmented
+    contraction — rather than two reduces added elementwise — is what
+    keeps the kernel's bitwise contract stable: an elementwise
+    ``delta + bd`` invites the backend to contract the buffer products
+    into FMAs (rounding ``bd`` differently than this oracle), while a
+    dot root reproduces the plain ``server_update`` geometry exactly.
+    With ``drain=False`` the appended rows carry weight 0 and the result
+    equals ``server_update`` bit for bit: round-to-nearest never yields a
+    ``-0.0`` cohort delta (``x - x = +0.0``), so the trailing zero-weight
+    products are exact no-op additions.
+    """
+    from repro.fl.aggregators import ServerHP, apply_rule
+
+    wa = jnp.concatenate([
+        weights.astype(jnp.float32),
+        jnp.where(drain, buf_w.astype(jnp.float32), 0.0),
+    ])
+    ua = jnp.concatenate([updates.astype(jnp.float32),
+                          buf.astype(jnp.float32)], axis=0)
+    delta = fedavg_reduce(ua, wa)
+    hp = ServerHP(eta=eta, beta1=beta1, beta2=beta2, tau=tau)
+    (m2, v2), p2 = apply_rule(
+        agg_idx, (m.astype(jnp.float32), v.astype(jnp.float32)),
+        params.astype(jnp.float32), delta, rnd, hp,
+    )
+    return p2, m2, v2
+
+
 def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict,
                  want_rid=False):
     """(N,) kinematics -> (latency (N,) f32, connected (N,) bool[, rid]).

@@ -35,19 +35,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _update_kernel(eta, beta1, beta2, tau, s_ref, w_ref, u_ref, p_ref,
-                   m_ref, v_ref, po_ref, mo_ref, vo_ref):
-    # s: (1, 2) traced scalars [global agg index, round]; w: (1, K);
-    # u: (K, bp); p/m/v: (1, bp) -> outputs (1, bp)
-    agg = s_ref[0, 0]
-    delta = jnp.dot(
-        w_ref[...], u_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
-    p, m, v = p_ref[...], m_ref[...], v_ref[...]
-    # global AGGREGATOR_ORDER indices (asserted against the registry by the
-    # traced wrapper below): 1 = fedavgm, 2 = fedadam, 3 = fedyogi;
-    # fedavg (0) and stale (4) are the plain AXPY with moments untouched
+def _rule_math(agg, delta, p, m, v, eta, beta1, beta2, tau):
+    """Branchless per-tile moment rules + parameter step (factored out of
+    the kernel body — one source for the registry expressions).
+
+    Global AGGREGATOR_ORDER indices (asserted against the registry by the
+    traced wrappers below): 1 = fedavgm, 2 = fedadam, 3 = fedyogi; fedavg
+    (0), stale (4) and fedbuff (5) are the plain AXPY with moments
+    untouched (their discounts act in weight space before the reduce).
+    """
     is_avgm = agg == 1.0
     is_adam = agg == 2.0
     is_yogi = agg == 3.0
@@ -65,9 +61,24 @@ def _update_kernel(eta, beta1, beta2, tau, s_ref, w_ref, u_ref, p_ref,
         adaptive, eta * m_new / (jnp.sqrt(v_new) + tau),
         jnp.where(is_avgm, eta * m_new, delta),
     )
-    po_ref[...] = p + step
-    mo_ref[...] = m_new
-    vo_ref[...] = v_new
+    return p + step, m_new, v_new
+
+
+def _update_kernel(eta, beta1, beta2, tau, s_ref, w_ref, u_ref, p_ref,
+                   m_ref, v_ref, po_ref, mo_ref, vo_ref):
+    # s: (1, 2) traced scalars [global agg index, round]; w: (1, K);
+    # u: (K, bp); p/m/v: (1, bp) -> outputs (1, bp)
+    agg = s_ref[0, 0]
+    delta = jnp.dot(
+        w_ref[...], u_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    po, mo, vo = _rule_math(
+        agg, delta, p_ref[...], m_ref[...], v_ref[...], eta, beta1, beta2, tau
+    )
+    po_ref[...] = po
+    mo_ref[...] = mo
+    vo_ref[...] = vo
 
 
 @functools.partial(
@@ -91,12 +102,7 @@ def server_update(
     interpret: bool = False,
 ):
     """Fused server update -> (params', m', v'), all (P,) fp32."""
-    from repro.fl.aggregators import AGGREGATOR_ORDER
-
-    # the branchless selects above hardcode the registry order; fail loudly
-    # if the registry is ever reordered without touching this kernel
-    assert AGGREGATOR_ORDER == ("fedavg", "fedavgm", "fedadam", "fedyogi",
-                                "stale"), AGGREGATOR_ORDER
+    _assert_registry_order()
     K, P = updates.shape
     pp = (-P) % block_p
     up = jnp.pad(updates, ((0, 0), (0, pp)))
@@ -127,3 +133,67 @@ def server_update(
         interpret=interpret,
     )(scalars, w2, up, row(params), row(m), row(v))
     return p2[0, :P], m2[0, :P], v2[0, :P]
+
+
+def _assert_registry_order():
+    """The branchless selects in ``_rule_math`` hardcode the registry
+    order; fail loudly if it is ever reordered without touching this
+    kernel."""
+    from repro.fl.aggregators import AGGREGATOR_ORDER
+
+    assert AGGREGATOR_ORDER == ("fedavg", "fedavgm", "fedadam", "fedyogi",
+                                "stale", "fedbuff"), AGGREGATOR_ORDER
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eta", "beta1", "beta2", "tau", "block_p", "interpret"),
+)
+def server_update_buffered(
+    updates: jax.Array,  # (K, P) flat cohort updates (in-round survivors)
+    weights: jax.Array,  # (K,) masked + normalized cohort weights
+    buf: jax.Array,  # (Kb, P) in-flight delta ring buffer (RoundState leaf)
+    buf_w: jax.Array,  # (Kb,) drained-slot weights (0 on undrained slots)
+    params: jax.Array,  # (P,) flat fp32 global model
+    m: jax.Array,  # (P,) first-moment server state
+    v: jax.Array,  # (P,) second-moment server state
+    agg_idx: jax.Array,  # () int32 GLOBAL AGGREGATOR_ORDER index (traced)
+    rnd: jax.Array,  # () int32 round counter (reserved for schedule rules)
+    drain: jax.Array,  # () bool: fold the buffer pre-reduce into delta
+    *,
+    eta: float = 1.0,
+    beta1: float = 0.9,
+    beta2: float = 0.99,
+    tau: float = 1e-3,
+    block_p: int = 2048,
+    interpret: bool = False,
+):
+    """Fused buffered server update -> (params', m', v'), all (P,) fp32.
+
+    The async-rounds (``fedbuff``) extension of ``server_update``: the
+    ``(Kb, P)`` in-flight delta ring buffer rides the SAME P-blocked fused
+    pass as the cohort — appended as Kb extra update rows whose weights
+    (staleness discounts folded in by the round core) are gated by the
+    traced ``drain`` flag in WEIGHT space, so the whole drained-buffer
+    reduce is one augmented ``(K + Kb)``-row contraction per tile.  That
+    single dot root is deliberate: an elementwise ``delta + buffer_delta``
+    add lets the backend contract the buffer products into FMAs and drift
+    off the oracle by an ulp, while the augmented contraction reproduces
+    ``ref.server_update_buffered`` (the identical augmented
+    ``fedavg_reduce``) bit for bit.  With ``drain=False`` the appended
+    rows carry weight 0 — exact no-op additions, because round-to-nearest
+    never yields a ``-0.0`` cohort delta (``x - x = +0.0``) — so every
+    lane of a fedbuff-bearing registry can route through this one entry
+    point unchanged.  Working set per program grows by the (Kb, block_p)
+    buffer tile; the caller budgets ``pick_block_p(K + Kb, P)``.
+    """
+    wa = jnp.concatenate([
+        weights.astype(jnp.float32),
+        jnp.where(drain, buf_w.astype(jnp.float32), 0.0),
+    ])
+    ua = jnp.concatenate([updates.astype(jnp.float32),
+                          buf.astype(jnp.float32)], axis=0)
+    return server_update(
+        ua, wa, params, m, v, agg_idx, rnd, eta=eta, beta1=beta1,
+        beta2=beta2, tau=tau, block_p=block_p, interpret=interpret,
+    )

@@ -148,6 +148,30 @@ def test_staleness_scale_discount():
     assert np.all(np.diff(s) < 0) and np.all(s > 0)
 
 
+def test_staleness_scale_zero_timeout_no_nan():
+    """Regression: ``timeout / (timeout + lateness)`` used to emit 0/0 NaN
+    weights when ``round_timeout_s`` reached 0 (and on-time clients have
+    zero lateness); the guarded denominator must keep every weight finite
+    and collapse the degenerate timeout to an exact-zero discount."""
+    lat = jnp.asarray([0.0, 7.5, 150.0], jnp.float32)
+    s = np.asarray(staleness_scale(lat, jnp.float32(0.0)))
+    assert np.isfinite(s).all()
+    np.testing.assert_array_equal(s, 0.0)
+
+
+def test_flconfig_rejects_nonpositive_timeout_and_buffer():
+    """The config layer refuses the degenerate geometries outright so the
+    NaN guard above stays a belt-and-braces backstop."""
+    from repro.config import FLConfig
+
+    kw = dict(num_clients=10, samples_per_client=32, batch_size=16)
+    for bad in (dict(round_timeout_s=0.0), dict(round_timeout_s=-1.0),
+                dict(buffer_size=0), dict(buffer_fill=0)):
+        with pytest.raises(ValueError):
+            FLConfig(**kw, **bad)
+    FLConfig(**kw, round_timeout_s=1e-3, buffer_size=1, buffer_fill=1)
+
+
 def test_validate_aggregators_catalog_error():
     assert validate_aggregators(("fedavg", "stale")) == ("fedavg", "stale")
     with pytest.raises(ValueError) as ei:
@@ -223,6 +247,40 @@ def test_fedavg_lane_bitwise_frozen_interpret(monkeypatch):
     pre-registry fedavg_reduce kernel (pick_block_p geometry shared)."""
     monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
     _assert_rounds_bitwise(AGGREGATOR_ORDER, 0)
+
+
+def test_stale_lane_all_stragglers_round_still_updates():
+    """Corner the ``stale`` rule on a round where EVERY selected client
+    misses the deadline: the lane must still apply the discounted update
+    (``upd_any`` keys on selection, not success) and stay finite, while
+    the strict fedavg lane from the identical state applies none."""
+    from repro.fl.aggregators import STALE_IDX
+
+    state, data, scn, step = _round_env(AGGREGATOR_ORDER, connection_rate=0.05)
+    _, _, _, step_legacy = _round_env(("fedavg",), connection_rate=0.05)
+    si = jnp.zeros((), jnp.int32)
+    found = False
+    for _ in range(12):
+        prev = state
+        state, m = step(state, scn, si, jnp.int32(STALE_IDX), data, True)
+        assert np.isfinite(np.asarray(state.params)).all()
+        if int(m.n_selected) > 0 and int(m.n_succeeded) == 0:
+            found = True
+            assert not np.array_equal(np.asarray(state.params),
+                                      np.asarray(prev.params))
+            # the round still pays its physics: twin advances, finite costs
+            tw = np.concatenate([np.ravel(x) for x in
+                                 jax.tree_util.tree_leaves(state.twin)])
+            tw0 = np.concatenate([np.ravel(x) for x in
+                                  jax.tree_util.tree_leaves(prev.twin)])
+            assert np.isfinite(tw).all() and not np.array_equal(tw, tw0)
+            for f in ("duration", "mean_real_latency"):
+                assert np.isfinite(np.asarray(getattr(m, f))).all(), f
+            sl, ml = step_legacy(prev, scn, si, si, data, True)
+            assert int(ml.n_succeeded) == 0
+            np.testing.assert_array_equal(np.asarray(sl.params),
+                                          np.asarray(prev.params))
+    assert found, "no all-stragglers round at CR=0.05 — lower CR/raise rounds"
 
 
 def test_fedprox_mu_zero_is_static_noop_and_mu_pulls_back():

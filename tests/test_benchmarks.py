@@ -82,6 +82,25 @@ def test_engine_throughput_bench_covers_aggregator_registry():
     assert set(engine_throughput.TIMED_AGGREGATORS) <= set(AGGREGATOR_ORDER)
 
 
+def test_bench_trajectory_records_async_lane_run():
+    """The committed BENCH_engine.json must carry at least one timed
+    ``fedbuff`` async-lane record on the reference grid: the buffered
+    round's steady-state overhead is trajectory data like the fleet
+    claim, not a one-off console line."""
+    import json
+
+    from benchmarks import engine_throughput
+
+    with open(engine_throughput.BENCH_JSON) as f:
+        runs = json.load(f)["runs"]
+    lane = [r for r in runs
+            if r.get("async_lane") and r.get("aggregators") == ["fedbuff"]]
+    assert lane, "no timed fedbuff async-lane run recorded"
+    r = lane[-1]
+    assert r["batched_rounds_per_s"] > 0
+    assert r["grid"] == 24  # the 3-strategy x full-catalog reference shape
+
+
 def test_engine_throughput_main_smoke_mode():
     """``main(smoke_mode=True)`` (the --smoke CLI) routes to the probe and
     never touches the timing cache."""

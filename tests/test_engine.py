@@ -316,6 +316,31 @@ def test_engine_rejects_unknown_aggregator():
                      aggregators=("fedadam",))
 
 
+def test_records_default_to_sole_swept_aggregator():
+    """GridResult lookups omit ``aggregator=`` on single-rule grids — the
+    sole swept rule resolves implicitly whatever it is — while a
+    multi-aggregator grid omission fails loudly, naming the axis values."""
+    eng = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                           aggregators=("fedadam",))
+    res = eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=2, eval_every=2)
+    assert res.index_of("contextual", 0, "ring") == res.index_of(
+        "contextual", 0, "ring", "fedadam")
+    recs = res.records("contextual", 0, "ring")
+    explicit = res.records("contextual", 0, "ring", "fedadam")
+    # (test_acc is NaN on non-eval rounds, so compare NaN-free fields)
+    assert [(r.round, r.sim_time) for r in recs] == [
+        (r.round, r.sim_time) for r in explicit]
+    assert len(recs) == 2 and recs[-1].round == 2
+    multi = ExperimentEngine(MLP, FL, "mnist", strategies=("contextual",),
+                             aggregators=("fedavg", "fedadam"))
+    rm = multi.run_grid(seeds=(0,), scenarios=("ring",), rounds=2,
+                        eval_every=2)
+    with pytest.raises(ValueError, match="fedadam"):
+        rm.records("contextual", 0, "ring")
+    with pytest.raises(ValueError, match="multiple aggregators"):
+        rm.index_of("contextual", 0, "ring")
+
+
 def test_stale_aggregator_discounts_stragglers():
     """Under CR < 1 the stale rule keeps straggler updates (discounted by
     realized round time) instead of dropping them: its trajectory leaves

@@ -1,0 +1,214 @@
+"""Async FedBuff rounds: ring-buffer semantics + buffered kernel parity.
+
+Contracts from the async-rounds tentpole:
+
+  * the fused ``server_update_buffered`` Pallas kernel (interpret mode on
+    CPU) reproduces ``kernels.ref.server_update_buffered`` BIT FOR BIT for
+    every registered aggregator, across padding-edge shapes (Kb=1 buffers,
+    non-multiple-of-block P) and both drain states — and with
+    ``drain=False`` it equals the unbuffered ``server_update`` exactly
+    (the ``-0.0`` gate), which is what lets fedbuff-bearing registries
+    route every lane through the one kernel;
+  * DIFFERENTIAL: with the buffer disabled (fill threshold = cohort size,
+    no deadline misses) a ``fedbuff`` round is bitwise-identical to the
+    legacy single-``fedavg`` path — metrics and EVERY RoundState leaf,
+    including the buffer leaves (inert zeros) — in both dispatch modes;
+  * with stragglers, a deadline-missing client's update parks in the ring
+    buffer (``n_buffered``, occupancy, dispatch/arrival metadata) and
+    lands in a LATER round (``n_drained``) with realized staleness, the
+    round that parks it applying NO update when nothing else landed.
+
+Tier-1 like the other kernel parity suites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.aggregators import AGGREGATOR_ORDER, FEDBUFF_IDX
+from repro.kernels import ref
+from repro.kernels.server_update import server_update, server_update_buffered
+
+pytestmark = pytest.mark.tier1
+
+
+def _operands(k, kb, p, seed=0):
+    ks = jax.random.split(jax.random.key(seed * 7919 + k * 31 + kb * 17 + p), 7)
+    u = jax.random.normal(ks[0], (k, p), jnp.float32)
+    w = jax.random.uniform(ks[1], (k,))
+    w = w / w.sum()
+    buf = jax.random.normal(ks[2], (kb, p), jnp.float32)
+    bw = jax.random.uniform(ks[3], (kb,))
+    params = jax.random.normal(ks[4], (p,), jnp.float32)
+    m = 0.1 * jax.random.normal(ks[5], (p,), jnp.float32)
+    v = jnp.abs(0.01 * jax.random.normal(ks[6], (p,), jnp.float32))
+    return u, w, buf, bw, params, m, v
+
+
+# padding edges: Kb=1 degenerate buffers, P one off either side of the
+# block, exact multiples, and a deeper buffer than cohort
+_EDGE_SHAPES = [
+    (1, 1, 2047, 2048), (5, 1, 2050, 2048), (5, 8, 2047, 2048),
+    (3, 4, 4096, 2048), (2, 16, 511, 256), (7, 3, 1024, 1024),
+]
+
+
+@pytest.mark.parametrize("agg", range(len(AGGREGATOR_ORDER)))
+@pytest.mark.parametrize("k,kb,p,bp", _EDGE_SHAPES)
+@pytest.mark.parametrize("drain", [False, True])
+def test_buffered_kernel_bitwise_vs_ref(agg, k, kb, p, bp, drain):
+    u, w, buf, bw, params, m, v = _operands(k, kb, p, seed=agg)
+    args = (u, w, buf, bw, params, m, v, jnp.int32(agg), jnp.int32(3),
+            jnp.asarray(drain))
+    got = server_update_buffered(*args, block_p=bp, interpret=True)
+    want = ref.server_update_buffered(*args)
+    for name, g, e in zip(("params", "m", "v"), got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e),
+                                      err_msg=f"{name} agg={agg}")
+
+
+@pytest.mark.parametrize("agg", range(len(AGGREGATOR_ORDER)))
+def test_buffered_kernel_no_drain_equals_unbuffered(agg):
+    """drain=False must be BITWISE the unbuffered kernel — including -0.0
+    outputs an unconditional ``delta + 0`` would flip to +0.0."""
+    u, w, buf, bw, params, m, v = _operands(5, 8, 2049, seed=agg + 100)
+    args = (u, w, params, m, v, jnp.int32(agg), jnp.int32(3))
+    got = server_update_buffered(
+        u, w, buf, bw, params, m, v, jnp.int32(agg), jnp.int32(3),
+        jnp.asarray(False), block_p=2048, interpret=True,
+    )
+    want = server_update(*args, block_p=2048, interpret=True)
+    for name, g, e in zip(("params", "m", "v"), got, want):
+        a, b = np.asarray(g), np.asarray(e)
+        assert np.array_equal(a, b) and np.array_equal(
+            np.signbit(a), np.signbit(b)
+        ), f"{name} agg={agg}"
+
+
+# ---------------------------------------------------------------------------
+# round-level contracts
+# ---------------------------------------------------------------------------
+def _round_env(aggregators, connection_rate=1.0, **fl_kw):
+    from repro.config import FLConfig
+    from repro.configs import get_config
+    from repro.core.scenarios import scenario_config, scenario_params
+    from repro.fl.rounds import (
+        experiment_key, flat_spec_of, init_state_traced, make_round_data,
+        make_round_step,
+    )
+    from repro.models import build_model
+    from repro.sharding import split_params
+    from repro.utils import tree_bytes
+
+    fl = FLConfig(num_clients=10, samples_per_client=32, batch_size=16,
+                  num_clusters=3, local_epochs=1,
+                  connection_rate=connection_rate, **fl_kw)
+    api = build_model(get_config("fl-mnist-mlp"))
+    init_params = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config("rush_hour", num_vehicles=10)
+    key = experiment_key("mnist", "contextual", 0)
+    state, regions = jax.jit(
+        lambda k: init_state_traced(init_params, fl, tc, k)
+    )(key)
+    data = make_round_data(key, "mnist", fl, regions)
+    spec_tree = jax.eval_shape(init_params, jax.random.key(0))
+    step = jax.jit(make_round_step(
+        api.loss, fl, fl.n_select, float(tree_bytes(spec_tree)),
+        flat_spec_of(spec_tree), ("contextual",), aggregators=aggregators,
+    ))
+    return state, data, scenario_params(tc), step
+
+
+def _assert_disabled_buffer_bitwise_fedavg():
+    """Buffer disabled = fill threshold at cohort size + no misses
+    (CR=1.0): the fedbuff lane must equal the legacy fedavg path bitwise
+    on metrics and EVERY RoundState leaf (buffer leaves stay inert
+    zeros)."""
+    state_l, data, scn, step_legacy = _round_env(("fedavg",))
+    state_f, _, _, step_fb = _round_env(AGGREGATOR_ORDER, buffer_fill=10)
+    si = jnp.zeros((), jnp.int32)
+    sl, ml = step_legacy(state_l, scn, si, si, data, True)
+    sf, mf = step_fb(state_f, scn, si, jnp.int32(FEDBUFF_IDX), data, True)
+    # premise: at CR=1.0 nobody misses, so the buffer never fills
+    assert int(mf.n_selected) > 0
+    assert int(mf.n_succeeded) == int(mf.n_selected)
+    assert int(mf.n_buffered) == 0 and int(mf.n_drained) == 0
+    for name in ml._fields:
+        a, b = np.asarray(getattr(ml, name)), np.asarray(getattr(mf, name))
+        assert np.array_equal(a, b, equal_nan=True), name
+    leaves_l = jax.tree_util.tree_leaves_with_path(sl)
+    for (path, a), b in zip(leaves_l, jax.tree_util.tree_leaves(sf)):
+        if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True), (
+            jax.tree_util.keystr(path)
+        )
+
+
+def test_fedbuff_disabled_buffer_bitwise_fedavg_ref_dispatch():
+    _assert_disabled_buffer_bitwise_fedavg()
+
+
+def test_fedbuff_disabled_buffer_bitwise_fedavg_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    _assert_disabled_buffer_bitwise_fedavg()
+
+
+def test_fedbuff_stragglers_buffer_then_drain():
+    """CR=0.5, fill=1: deadline-missers park in the buffer with realized
+    dispatch/arrival metadata and land in a LATER round discounted —
+    the parking round applies no update when nothing else landed."""
+    state, data, scn, step = _round_env(
+        AGGREGATOR_ORDER, connection_rate=0.5, buffer_fill=1,
+    )
+    si = jnp.zeros((), jnp.int32)
+    ai = jnp.int32(FEDBUFF_IDX)
+    tot_buffered = tot_drained = 0
+    saw_noop_parking = False
+    for _ in range(8):
+        prev = state
+        state, m = step(state, scn, si, ai, data, True)
+        nb, nd = int(m.n_buffered), int(m.n_drained)
+        tot_buffered += nb
+        tot_drained += nd
+        occ = np.asarray(state.buf_mask)
+        assert int(occ.sum()) <= 10
+        if nb > 0:
+            # freshly parked slots: dispatched at round start, arriving at
+            # least one full deadline later
+            fresh = occ & ~np.asarray(prev.buf_mask)
+            assert fresh.any()
+            sent = np.asarray(state.buf_sent)[fresh]
+            arrive = np.asarray(state.buf_arrive)[fresh]
+            np.testing.assert_array_equal(sent, float(prev.sim_time))
+            assert np.all(arrive >= sent + 15.0)  # round_timeout_s default
+        if nb > 0 and int(m.n_succeeded) == 0 and nd == 0:
+            saw_noop_parking = True
+            np.testing.assert_array_equal(
+                np.asarray(state.params), np.asarray(prev.params)
+            )
+        if nd > 0:
+            # drained slots freed (unless refilled this round)
+            assert int(occ.sum()) <= int(np.asarray(prev.buf_mask).sum()) \
+                - nd + nb
+        assert np.isfinite(np.asarray(state.params)).all()
+    assert tot_buffered > 0, "no straggler ever parked — raise rounds"
+    assert tot_drained > 0, "no buffered update ever landed"
+    assert saw_noop_parking or tot_drained >= tot_buffered - int(
+        np.asarray(state.buf_mask).sum()
+    )
+
+
+def test_fedbuff_drain_fires_only_at_fill_threshold():
+    """fill=3 holds arrived updates until three have accumulated: drains
+    are all-or-nothing at >= 3 slots, never a partial trickle."""
+    state, data, scn, step = _round_env(
+        AGGREGATOR_ORDER, connection_rate=0.4, buffer_fill=3,
+    )
+    si = jnp.zeros((), jnp.int32)
+    ai = jnp.int32(FEDBUFF_IDX)
+    for _ in range(10):
+        state, m = step(state, scn, si, ai, data, False)
+        nd = int(m.n_drained)
+        assert nd == 0 or nd >= 3, nd
+        assert np.isfinite(np.asarray(state.params)).all()
