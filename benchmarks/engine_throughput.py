@@ -64,14 +64,44 @@ ROUNDS = 5
 EVAL_EVERY = 5
 
 
-def _grid_cfgs(num_clients, samples):
+def _grid_cfgs(num_clients, samples, dtype="float32"):
     from repro.config import FLConfig
     from repro.configs import get_config
 
     model = get_config("fl-mnist-mlp")
     fl = FLConfig(num_clients=num_clients, samples_per_client=samples,
-                  batch_size=32, num_clusters=5, local_epochs=1)
+                  batch_size=32, num_clusters=5, local_epochs=1,
+                  compute_dtype=dtype)
     return model, fl
+
+
+def _carry_bytes(model, fl) -> int:
+    """Donated per-experiment RoundState bytes at ACTUAL leaf dtypes.
+
+    ``jax.eval_shape`` over the real init trace — nothing allocated; the
+    recorded number is what the precision axis is claimed to halve (the
+    same account ``repro.launch.hlo_analysis.carry_footprint`` reports
+    per leaf for the reference config).
+    """
+    from repro.core.scenarios import scenario_config
+    from repro.fl.rounds import experiment_key, init_state_traced
+    from repro.models import build_model
+    from repro.sharding import split_params
+
+    api = build_model(model)
+    init = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config("ring", num_vehicles=fl.num_clients)
+    state, _ = jax.eval_shape(
+        lambda k: init_state_traced(init, fl, tc, k),
+        experiment_key("mnist", "contextual", 0),
+    )
+    total = 0
+    for x in jax.tree_util.tree_leaves(state):
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        total += n * x.dtype.itemsize
+    return total
 
 
 def _timed(sweep) -> float:
@@ -100,12 +130,20 @@ def record_run(result: dict, label: str, path: str = BENCH_JSON) -> dict:
     doc.setdefault("runs", []).append(entry)
     if len(doc["runs"]) >= 2:
         prev, cur = doc["runs"][-2], doc["runs"][-1]
-        # only chain the trajectory across LIKE runs: same grid size AND
-        # the same aggregator axis — a fedbuff async-lane entry adjacent
-        # to a fedavg reference entry is a different program, not a
-        # regression signal
+        # only chain the trajectory across LIKE runs: same grid size, the
+        # same aggregator axis AND the same precision lane — a fedbuff
+        # async-lane entry adjacent to a fedavg reference entry (or a bf16
+        # entry adjacent to an fp32 one) is a different program, not a
+        # regression signal.  Entries recorded before the precision axis
+        # existed carry no dtype fields and ARE the fp32 lane — the
+        # ``or "float32"`` fallback keeps them chaining with new fp32 runs.
+        like_dtype = all(
+            (prev.get(f) or "float32") == (cur.get(f) or "float32")
+            for f in ("param_dtype", "compute_dtype")
+        )
         if (prev.get("grid") == cur.get("grid")
                 and prev.get("aggregators") == cur.get("aggregators")
+                and like_dtype
                 and prev.get("batched_s") and cur.get("batched_s")):
             cur["steady_speedup_vs_previous"] = (
                 prev["batched_s"] / cur["batched_s"]
@@ -191,6 +229,8 @@ def _run(num_clients=20, samples=64):
                        "seeds": len(SEEDS), "scenarios": len(SCENARIOS),
                        "num_clients": num_clients},
         "aggregators": list(TIMED_AGGREGATORS),
+        "param_dtype": fl.param_dtype,
+        "compute_dtype": fl.compute_dtype,
         "num_clients": num_clients,
         "samples_per_client": samples,
         "rounds_per_experiment": ROUNDS,
@@ -305,6 +345,8 @@ def async_lane(num_clients=20, samples=64, label=None):
                        "num_clients": num_clients},
         "aggregators": ["fedbuff"],
         "async_lane": True,
+        "param_dtype": fl.param_dtype,
+        "compute_dtype": fl.compute_dtype,
         "connection_rate": 0.7,
         "num_clients": num_clients,
         "samples_per_client": samples,
@@ -318,6 +360,70 @@ def async_lane(num_clients=20, samples=64, label=None):
     entry = record_run(r, label or "async-lane")
     print(f"engine-async,grid={r['grid']}x{ROUNDS}r,cr=0.7,"
           f"batched={r['batched_rounds_per_s']:.2f}r/s,"
+          f"cold={t_cold:.1f}s,label={entry['label']}")
+    return r
+
+
+def precision_lane(dtype="bfloat16", num_clients=20, samples=64, label=None):
+    """Timed mixed-precision lane on the reference 24-run grid.
+
+    Same grid geometry and single-``fedavg`` axis as the timed reference
+    sweep, but ``FLConfig.compute_dtype`` set from ``dtype``: in the bf16
+    lane every client delta row, the fedbuff ring and the hierarchical
+    chunk partials carry bf16 while the fp32 master params + server
+    moments (and every kernel's VMEM accumulator) stay full-width — the
+    comm payload and the heavy carry leaves halve.  Batched path only
+    (cold + min-of-2 steady): the precision axis lives entirely inside the
+    compiled grid program, so the serial baseline adds nothing here.  The
+    recorded entry carries ``param_dtype`` / ``compute_dtype`` and the
+    eval_shape'd ``carry_bytes_per_experiment``; commit a float32 +
+    bfloat16 PAIR so the footprint halving is readable straight off
+    BENCH_engine.json, and ``record_run`` only chains
+    ``steady_speedup_vs_previous`` across like-dtype runs.
+    """
+    from repro.config import FLConfig
+    from repro.fl.engine import ExperimentEngine
+
+    if dtype not in FLConfig.SUPPORTED_DTYPES:
+        raise ValueError(
+            f"unknown dtype {dtype!r}; supported dtypes: "
+            f"{', '.join(FLConfig.SUPPORTED_DTYPES)}"
+        )
+    model, fl = _grid_cfgs(num_clients, samples, dtype=dtype)
+    eng = ExperimentEngine(model, fl, "mnist", strategies=STRATEGIES,
+                           aggregators=TIMED_AGGREGATORS)
+
+    def sweep():
+        res = eng.run_grid(seeds=SEEDS, scenarios=SCENARIOS, rounds=ROUNDS,
+                           eval_every=EVAL_EVERY)
+        jax.block_until_ready(res.metrics)
+
+    t_cold = _timed(sweep)
+    t_steady = min(_timed(sweep) for _ in range(2))
+    n_total = len(STRATEGIES) * len(SEEDS) * len(SCENARIOS) * ROUNDS
+    r = {
+        "grid": len(STRATEGIES) * len(SEEDS) * len(SCENARIOS),
+        "grid_shape": {"strategies": len(STRATEGIES), "aggregators": 1,
+                       "seeds": len(SEEDS), "scenarios": len(SCENARIOS),
+                       "num_clients": num_clients},
+        "aggregators": list(TIMED_AGGREGATORS),
+        "precision_lane": True,
+        "param_dtype": fl.param_dtype,
+        "compute_dtype": fl.compute_dtype,
+        "carry_bytes_per_experiment": _carry_bytes(model, fl),
+        "num_clients": num_clients,
+        "samples_per_client": samples,
+        "rounds_per_experiment": ROUNDS,
+        "total_rounds": n_total,
+        "n_devices": len(jax.devices()),
+        "batched_cold_s": t_cold,
+        "batched_s": t_steady,
+        "batched_rounds_per_s": n_total / t_steady,
+    }
+    entry = record_run(r, label or f"precision-{dtype}")
+    print(f"engine-precision,grid={r['grid']}x{ROUNDS}r,dtype={dtype},"
+          f"batched={r['batched_rounds_per_s']:.2f}r/s,"
+          f"carry_bytes={r['carry_bytes_per_experiment']},"
           f"cold={t_cold:.1f}s,label={entry['label']}")
     return r
 
@@ -373,17 +479,21 @@ def smoke(num_clients=8, samples=32):
 
 
 def main(num_clients=None, samples=None, smoke_mode=False, label=None,
-         fleet_clients=None, async_mode=False):
+         fleet_clients=None, async_mode=False, dtype=None):
     # per-mode defaults: the probe stays tiny, the timed bench keeps its
     # reference 24-run grid; explicit sizes pass through to either mode.
     # ``fleet_clients`` (--clients) selects the fleet-scale hierarchical
-    # run and ``async_mode`` (--async-lane) the fedbuff lane instead of
-    # the timed reference grid.
+    # run, ``async_mode`` (--async-lane) the fedbuff lane and ``dtype``
+    # (--dtype) the mixed-precision lane instead of the timed reference
+    # grid.
     if smoke_mode:
         return smoke(num_clients=num_clients or 8, samples=samples or 32)
     if async_mode:
         return async_lane(num_clients=num_clients or 20,
                           samples=samples or 64, label=label)
+    if dtype:
+        return precision_lane(dtype, num_clients=num_clients or 20,
+                              samples=samples or 64, label=label)
     if fleet_clients:
         return fleet(num_clients=fleet_clients, label=label)
     if os.environ.get("REPRO_BENCH_CACHED_ONLY"):
@@ -425,8 +535,11 @@ if __name__ == "__main__":
     ap.add_argument("--async-lane", action="store_true", dest="async_lane",
                     help="timed fedbuff (buffered async rounds) lane on the "
                          "reference grid at CR=0.7")
+    ap.add_argument("--dtype", default=None,
+                    help="timed mixed-precision lane at this compute dtype "
+                         "(bfloat16 / float32) on the reference grid")
     ap.add_argument("--label", default=None,
                     help="label recorded with this run in BENCH_engine.json")
     args = ap.parse_args()
     main(smoke_mode=args.smoke, label=args.label, fleet_clients=args.clients,
-         async_mode=args.async_lane)
+         async_mode=args.async_lane, dtype=args.dtype)

@@ -331,7 +331,20 @@ class FLConfig:
     # bitwise while nobody misses a deadline).
     buffer_size: int = 8
     buffer_fill: int = 1
+    # Precision axis (docs/performance.md "Precision"): ``param_dtype`` is
+    # the master model carry (``RoundState.params``); ``compute_dtype`` the
+    # client training / update-vector / comm lane — the (K, P) deltas, the
+    # (Kb, P) fedbuff ring and the (R, P) chunk partials.  Server moments
+    # ``opt_m``/``opt_v`` and every kernel's VMEM accumulator stay fp32
+    # regardless.  The float32/float32 default traces the exact pre-axis
+    # program (zero casts, bitwise — tests/test_precision.py).  Names, not
+    # jnp dtypes: this module stays jax-free; ``fl.rounds.precision_of``
+    # resolves them.
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
     seed: int = 0
+
+    SUPPORTED_DTYPES = ("float32", "bfloat16")
 
     def __post_init__(self):
         if self.round_timeout_s <= 0:
@@ -350,6 +363,14 @@ class FLConfig:
                 f"buffer_fill must be >= 1 (the server drains the buffer "
                 f"only once this many deltas arrived), got {self.buffer_fill!r}"
             )
+        for field in ("param_dtype", "compute_dtype"):
+            name = getattr(self, field)
+            if name not in self.SUPPORTED_DTYPES:
+                raise ValueError(
+                    f"unknown {field} {name!r}; supported dtypes: "
+                    f"{', '.join(self.SUPPORTED_DTYPES)} "
+                    f"(see docs/performance.md \"Precision\")"
+                )
 
     @property
     def n_select(self) -> int:

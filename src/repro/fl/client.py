@@ -23,6 +23,7 @@ def make_local_trainer(
     epochs: int,
     batch_size: int,
     mu: float = 0.0,
+    compute_dtype=None,
 ) -> Callable:
     """Build jit'd cohort trainer.
 
@@ -36,7 +37,22 @@ def make_local_trainer(
     the aggregator axis is swept against.  The ``mu == 0`` gate is
     STATIC: the default program contains no proximal term at all, so
     plain FedAvg local SGD stays bitwise-identical by construction.
+
+    ``compute_dtype`` (a jnp dtype, or None = fp32) is the mixed-precision
+    lane, the ``models/layers.py`` zoo idiom lifted into the FL client:
+    each loss/grad evaluation casts the fp32 master params down to
+    ``compute_dtype`` INSIDE the differentiated closure, so the forward
+    pass (and the model's activations, which follow the param dtype) runs
+    half-width while the cast's VJP hands fp32 cotangents back to the fp32
+    master — fp32 loss/grad accumulation, fp32 SGD state.  The ``None``
+    gate is STATIC like ``mu``: the default program contains no casts at
+    all and stays bitwise-identical.
     """
+    cast = None
+    if compute_dtype is not None and compute_dtype != jnp.float32:
+        cast = lambda tree: jax.tree_util.tree_map(
+            lambda w: w.astype(compute_dtype), tree
+        )
 
     def local_sgd(global_params, images, labels, key):
         n = images.shape[0]
@@ -49,7 +65,11 @@ def make_local_trainer(
 
         def step(p, bidx):
             batch = {"images": images[bidx], "labels": labels[bidx]}
-            g = jax.grad(lambda pp: loss_fn(pp, batch)[0])(p)
+            if cast is None:
+                fwd = lambda pp: loss_fn(pp, batch)[0]
+            else:
+                fwd = lambda pp: loss_fn(cast(pp), batch)[0]
+            g = jax.grad(fwd)(p)
             if mu:
                 g = jax.tree_util.tree_map(
                     lambda gw, w, w0: gw + mu * (w - w0), g, p, global_params

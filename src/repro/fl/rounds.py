@@ -123,6 +123,26 @@ from repro.utils import flatten_to_vector, fold_in_str, unflatten_from_vector
 # lax.switch branch order: the traced strategy axis indexes this tuple.
 STRATEGY_ORDER: Tuple[str, ...] = ("greedy", "gossip", "data", "network", "contextual")
 
+# FLConfig dtype NAMES -> jnp dtypes (the config module stays jax-free;
+# FLConfig.__post_init__ rejects anything outside this set by name)
+_PRECISIONS = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def precision_of(fl: FLConfig) -> Tuple[Any, Any]:
+    """Resolve the config's precision axis -> (param_dtype, compute_dtype).
+
+    ``param_dtype`` is the master model carry (``RoundState.params``);
+    ``compute_dtype`` the client-update / comm lane — the (K, P) delta
+    vectors, the (Kb, P) fedbuff ring and the (R, P) chunk partials.  The
+    server moments ``opt_m``/``opt_v`` stay fp32 regardless: they are the
+    accumulator the adaptive rules integrate over, never a comm payload.
+    Both default to fp32, in which case every gate below is static-off and
+    the traced program is the historical one.
+    """
+    pd = _PRECISIONS[getattr(fl, "param_dtype", "float32")]
+    cd = _PRECISIONS[getattr(fl, "compute_dtype", "float32")]
+    return jnp.dtype(pd), jnp.dtype(cd)
+
 # Twin integration inside the round core splits every advance into this many
 # equal sub-steps (static trip count): under vmap no grid lane lock-steps on
 # the slowest lane's round duration, and the scan body stays while-loop-free.
@@ -132,10 +152,12 @@ ADVANCE_SUBSTEPS = 15
 class RoundState(NamedTuple):
     """Everything a round mutates, as one device-resident pytree.
 
-    ``params`` is the FLAT (P,) fp32 model vector (see module docstring);
+    ``params`` is the FLAT (P,) model vector in the MASTER dtype
+    (``FLConfig.param_dtype``, fp32 by default — see module docstring);
     ``opt_m`` / ``opt_v`` the server optimizer's first/second-moment
-    vectors in the same flat layout (zeros at init; plain fedavg carries
-    them untouched); ``sketch_sign`` is a per-experiment constant (the
+    vectors in the same flat layout, ALWAYS fp32 (zeros at init; plain
+    fedavg carries them untouched); ``sketch_sign`` is a per-experiment
+    constant (the
     Rademacher projection signs) carried here so the rounds scan never
     re-draws a P-long Bernoulli — XLA cannot hoist it out of the scan
     body on its own.
@@ -150,15 +172,16 @@ class RoundState(NamedTuple):
     them through as inert zeros.
     """
 
-    params: jax.Array  # (P,) flat fp32 global model vector
-    opt_m: jax.Array  # (P,) server first-moment state (fl.aggregators)
-    opt_v: jax.Array  # (P,) server second-moment state
+    params: jax.Array  # (P,) flat global model vector (FLConfig.param_dtype)
+    opt_m: jax.Array  # (P,) server first-moment state (fl.aggregators; fp32)
+    opt_v: jax.Array  # (P,) server second-moment state (fp32)
     twin: TwinState  # ground-truth traffic state
     sketches: jax.Array  # (N, sketch_dim) update sketches (stage 3)
     sketch_age: jax.Array  # (N,) rounds since last report
     clusters: jax.Array  # (N,) int32 data-cluster labels
     sketch_sign: jax.Array  # (P padded,) Rademacher signs (per-experiment const)
-    buf_delta: jax.Array  # (Kb, P) in-flight straggler deltas (fedbuff)
+    buf_delta: jax.Array  # (Kb, P) in-flight straggler deltas (fedbuff;
+    #     FLConfig.compute_dtype — the comm-lane payload precision)
     buf_arrive: jax.Array  # (Kb,) f32 absolute arrival sim_time per slot
     buf_sent: jax.Array  # (Kb,) f32 dispatch sim_time (staleness base)
     buf_weight: jax.Array  # (Kb,) f32 sample-count weight at dispatch
@@ -304,7 +327,14 @@ def init_state_traced(
     twin_state = init_twin_state(scn, twin_init_key(key))
     regions = regions_of(twin_state.pos, scn)
     N = fl.num_clients
+    # moments ALWAYS fp32 (derived from the fp32 init vector, before any
+    # master downcast); params carry the master dtype, the fedbuff ring
+    # the compute dtype — static gates, so the fp32 default traces the
+    # exact historical program (zero casts)
+    pd, cd = precision_of(fl)
     opt_m, opt_v = init_opt_vectors(params_vec)
+    if pd != jnp.float32:
+        params_vec = params_vec.astype(pd)
     state = RoundState(
         params=params_vec,
         opt_m=opt_m,
@@ -314,8 +344,7 @@ def init_state_traced(
         sketch_age=jnp.full((N,), jnp.inf, jnp.float32),
         clusters=jnp.zeros((N,), jnp.int32),
         sketch_sign=sketch_sign,
-        buf_delta=jnp.zeros((fl.buffer_size, params_vec.shape[0]),
-                            jnp.float32),
+        buf_delta=jnp.zeros((fl.buffer_size, params_vec.shape[0]), cd),
         buf_arrive=jnp.zeros((fl.buffer_size,), jnp.float32),
         buf_sent=jnp.zeros((fl.buffer_size,), jnp.float32),
         buf_weight=jnp.zeros((fl.buffer_size,), jnp.float32),
@@ -399,7 +428,11 @@ def _row(leaf, data_idx):
 def make_warmup(loss_fn, fl: FLConfig, param_spec):
     """Deadline-rule bootstrap: every client reports one gradient sketch,
     then the first clustering runs.  Pure: (state, data[, data_idx]) -> state."""
-    one_step = make_local_trainer(loss_fn, fl.learning_rate, 1, fl.batch_size)
+    _, cd = precision_of(fl)
+    one_step = make_local_trainer(
+        loss_fn, fl.learning_rate, 1, fl.batch_size,
+        compute_dtype=None if cd == jnp.float32 else cd,
+    )
 
     def warmup(state: RoundState, data: RoundData, data_idx=None) -> RoundState:
         bs = fl.batch_size
@@ -488,15 +521,27 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
     # to the cohort tile — budget the extra rows so the VMEM invariant holds
     buf_rows = Kb if has_fedbuff else 0
     hp = server_hp(fl)
+    # precision axis (FLConfig.param_dtype / compute_dtype): every gate
+    # below is STATIC — the fp32/fp32 default contains zero casts and
+    # traces the exact pre-axis program (tests/test_precision.py holds the
+    # bitwise contract; the bf16 lane halves the comm payload, the update
+    # rows, the fedbuff ring and the chunk partials while the fp32 master
+    # + moments and every kernel's fp32 accumulation absorb the rounding)
+    _, cd = precision_of(fl)
+    half = cd != jnp.float32
+    itemsize = cd.itemsize
     trainer = make_local_trainer(
         loss_fn, fl.learning_rate, fl.local_epochs, fl.batch_size,
-        mu=fl.fedprox_mu,
+        mu=fl.fedprox_mu, compute_dtype=cd if half else None,
     )
     n_select = fl.n_select
     N, K = fl.num_clients, cohort_size
     P = flat_size_of(param_spec)
     compute_s = fl.local_epochs * fl.compute_s_per_epoch
-    mb = jnp.asarray(model_bytes, jnp.float32)
+    # the latency economics price the bytes a vehicle actually uploads:
+    # half-width deltas halve the payload (exact *1.0 for the fp32 lane,
+    # so the default round physics stay bitwise)
+    mb = jnp.asarray(model_bytes * (itemsize / 4.0), jnp.float32)
     cr = fl.connection_rate
     nan = jnp.float32(jnp.nan)
 
@@ -779,7 +824,13 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                 lbls_c = jnp.where(v_c[:, None], lbls_c, 0)
                 _, vb = trainer(params, imgs_c, lbls_c, k_c)
                 vb = vb * v_c[:, None]
-                part_c, _ = rsu_reduce_auto(vb, w_c, r_c, R)
+                if half:
+                    # the comm lane: chunk deltas travel (and park in the
+                    # fedbuff ring) at the compute dtype
+                    vb = vb.astype(cd)
+                part_c, _ = rsu_reduce_auto(
+                    vb, w_c, r_c, R, out_dtype=cd if half else None
+                )
                 sks_c = jax.vmap(
                     lambda v: apply_sketch(v, state.sketch_sign, fl.sketch_dim)
                 )(vb)
@@ -793,7 +844,9 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                     return (partials + part_c, sketches, sketch_age, buf), None
                 return (partials + part_c, sketches, sketch_age), None
 
-            carry0 = (jnp.zeros((R, P), jnp.float32), state.sketches,
+            # the (R, P) per-RSU partials ride the chunk carry at the
+            # compute dtype (fp32 default; bf16 halves the carry)
+            carry0 = (jnp.zeros((R, P), cd), state.sketches,
                       state.sketch_age)
             if has_fedbuff:
                 carry0 = carry0 + (
@@ -810,7 +863,7 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             # server tier: R live partials (weights already folded in at
             # the edge) reduce through the same fused flat pass
             red, red_w, bp = partials, live.astype(jnp.float32), \
-                pick_block_p(R + buf_rows, P)
+                pick_block_p(R + buf_rows, P, itemsize=itemsize)
         else:
             if data_idx is None:
                 imgs, lbls = data.images[idx_c], data.labels[idx_c]
@@ -822,6 +875,10 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
             lbls = jnp.where(slot_valid[:, None], lbls, 0)
             _, vecs = trainer(params, imgs, lbls, fold_in_str(rk, "local"))
             vecs = vecs * slot_valid[:, None]
+            if half:
+                # the comm lane: update vectors travel to the reduce (and
+                # park in the fedbuff ring) at the compute dtype
+                vecs = vecs.astype(cd)
 
             # ---- deadline rule: survivors report sketches --------------
             sks = jax.vmap(
@@ -837,7 +894,8 @@ def make_round_step(loss_fn, fl: FLConfig, cohort_size: int, model_bytes: float,
                 buf_delta = jnp.where(
                     keep[:, None], state.buf_delta, 0.0
                 ).at[slot].set(vecs, mode="drop")
-            red, red_w, bp = vecs, w, pick_block_p(K + buf_rows, P)
+            red, red_w, bp = vecs, w, pick_block_p(K + buf_rows, P,
+                                                   itemsize=itemsize)
 
         # ---- server update over deadline survivors (one fused flat pass)
         if plain_fedavg:

@@ -33,15 +33,18 @@ def apply_delta(global_params, delta):
 
 
 def apply_delta_flat(params_vec: jax.Array, delta_vec: jax.Array) -> jax.Array:
-    """``apply_delta`` for the flat (P,) fp32 carry layout.
+    """``apply_delta`` for the flat (P,) master carry layout.
 
-    The round core carries the global model as one fp32 vector
-    (``repro.fl.rounds``), so the update is a single AXPY; the fp32
-    accumulation of ``apply_delta`` is inherent (the carry IS fp32 — use
-    sites cast back per-leaf via the flat spec).  Keep in lockstep with
+    The round core carries the global model as one flat vector
+    (``repro.fl.rounds``), so the update is a single AXPY with fp32
+    accumulation, written back in the MASTER dtype (``FLConfig.
+    param_dtype``) — exactly ``apply_delta``'s per-leaf rule on the flat
+    layout.  For the fp32 default carry every cast is the identity and
+    this IS the historical ``params + delta``.  Keep in lockstep with
     ``apply_delta`` above.
     """
-    return params_vec + delta_vec
+    acc = params_vec.astype(jnp.float32) + delta_vec.astype(jnp.float32)
+    return acc.astype(params_vec.dtype)
 
 
 @jax.jit

@@ -68,48 +68,72 @@ FEDAVG_VMEM_BUDGET = 2 * 1024 * 1024
 _BLOCK_P_MIN, _BLOCK_P_MAX = 128, 8192  # lane width .. diminishing returns
 
 
-def pick_block_p(K: int, P: int, vmem_budget: int = FEDAVG_VMEM_BUDGET) -> int:
-    """Column-tile width for flat (K, P) reductions (``fedavg_reduce``).
+def _widest_block_p(col_bytes: int, P: int, vmem_budget: int) -> int:
+    """Widest power-of-two column tile whose working set fits the budget.
 
-    Invariant: ``K * block_p * 4 <= vmem_budget`` — the per-program VMEM
-    working set never exceeds the budget, whatever the cohort width.  Under
-    that cap the widest power-of-two tile wins (fewer grid steps = fewer
-    HBM descriptor walks for small cohorts), clamped to
-    [``_BLOCK_P_MIN``, ``_BLOCK_P_MAX``]: below the 128-lane width a tile
-    is pure padding, above 8192 wider tiles stop paying on P in the
-    ~1e5..1e7 range this engine sweeps.  ``P`` only caps the tile — a tile
-    wider than the padded vector would be pure padding.  Cohorts too wide
-    to fit even a single-lane tile (K > budget / 512) are rejected rather
-    than silently over-budget.
+    ``col_bytes`` is the VMEM cost of ONE tile column (the sum over tile
+    rows of their element sizes); the tile is clamped to
+    [``_BLOCK_P_MIN``, ``_BLOCK_P_MAX``] and capped by the padded vector
+    width (a wider tile would be pure padding).
     """
-    if K <= 0:
-        raise ValueError(f"cohort width must be positive, got K={K}")
-    if K * _BLOCK_P_MIN * 4 > vmem_budget:
-        raise ValueError(
-            f"cohort K={K} cannot fit a {_BLOCK_P_MIN}-lane tile in "
-            f"{vmem_budget} B of VMEM; raise the budget or shard the cohort"
-        )
-    fit = vmem_budget // (4 * K)
+    fit = vmem_budget // col_bytes
     bp = _BLOCK_P_MIN
     while bp * 2 <= min(fit, _BLOCK_P_MAX):
         bp *= 2
     if P > 0:
         pow2_ceil_p = 1 << max(P - 1, 1).bit_length()
         bp = min(bp, max(pow2_ceil_p, _BLOCK_P_MIN))
-    assert K * bp * 4 <= vmem_budget  # the invariant, by construction
+    return bp
+
+
+def pick_block_p(K: int, P: int, vmem_budget: int = FEDAVG_VMEM_BUDGET,
+                 itemsize: int = 4) -> int:
+    """Column-tile width for flat (K, P) reductions (``fedavg_reduce``).
+
+    Invariant: ``K * block_p * itemsize <= vmem_budget`` — the per-program
+    VMEM working set never exceeds the budget, whatever the cohort width.
+    ``itemsize`` is the update-row element size in bytes (4 for the fp32
+    lane, 2 for bf16 update rows — half-width operands earn a
+    proportionally wider tile under the same budget; the ``*_auto``
+    dispatchers pass ``updates.dtype.itemsize``).  Under the cap the widest
+    power-of-two tile wins (fewer grid steps = fewer HBM descriptor walks
+    for small cohorts), clamped to [``_BLOCK_P_MIN``, ``_BLOCK_P_MAX``]:
+    below the 128-lane width a tile is pure padding, above 8192 wider
+    tiles stop paying on P in the ~1e5..1e7 range this engine sweeps.
+    ``P`` only caps the tile — a tile wider than the padded vector would be
+    pure padding.  Cohorts too wide to fit even a single-lane tile
+    (K > budget / (128 * itemsize)) are rejected rather than silently
+    over-budget.
+    """
+    if K <= 0:
+        raise ValueError(f"cohort width must be positive, got K={K}")
+    if itemsize not in (1, 2, 4, 8):
+        raise ValueError(f"itemsize must be a power-of-two byte size, "
+                         f"got {itemsize!r}")
+    if K * _BLOCK_P_MIN * itemsize > vmem_budget:
+        raise ValueError(
+            f"cohort K={K} cannot fit a {_BLOCK_P_MIN}-lane tile of "
+            f"{itemsize}-byte rows in {vmem_budget} B of VMEM; raise the "
+            f"budget or shard the cohort"
+        )
+    bp = _widest_block_p(K * itemsize, P, vmem_budget)
+    assert K * bp * itemsize <= vmem_budget  # the invariant, by construction
     return bp
 
 
 def pick_rsu_blocks(K: int, P: int, n_rsu: int,
-                    vmem_budget: int = FEDAVG_VMEM_BUDGET) -> tuple[int, int]:
+                    vmem_budget: int = FEDAVG_VMEM_BUDGET,
+                    itemsize: int = 4) -> tuple[int, int]:
     """(block_k, block_p) for the segmented (K, P) -> (R, P) reduce.
 
     The ``rsu_reduce`` working set per program is the (block_k, block_p)
-    update tile PLUS the (Rp, block_p) partial-sum accumulator (Rp = the
-    RSU axis padded to the 128-lane minimum), so the budget invariant is
-    ``(block_k + Rp) * block_p * 4 <= vmem_budget`` — ``pick_block_p``'s
-    rule with the cohort width inflated by the accumulator rows.  Small
-    cohorts keep a single k-block (``block_k = K``), which is the
+    update tile (``itemsize``-byte elements — bf16 rows cost half) PLUS
+    the (Rp, block_p) partial-sum accumulator (Rp = the RSU axis padded to
+    the 128-lane minimum; ALWAYS fp32 VMEM scratch, whatever the operand
+    dtype), so the budget invariant is ``(block_k * itemsize + Rp * 4) *
+    block_p <= vmem_budget`` — ``pick_block_p``'s rule with the cohort
+    rows at their true element size and the accumulator rows at fp32.
+    Small cohorts keep a single k-block (``block_k = K``), which is the
     bitwise-vs-ref geometry; fleet-size cohorts split K into the widest
     power-of-two chunk that still fits a minimum-width tile (the k-blocked
     walk's per-RSU sums then compose chunk-wise — exact for the
@@ -117,18 +141,23 @@ def pick_rsu_blocks(K: int, P: int, n_rsu: int,
     """
     if K <= 0:
         raise ValueError(f"cohort width must be positive, got K={K}")
+    if itemsize not in (1, 2, 4, 8):
+        raise ValueError(f"itemsize must be a power-of-two byte size, "
+                         f"got {itemsize!r}")
     rp = max(_BLOCK_P_MIN, -(-n_rsu // _BLOCK_P_MIN) * _BLOCK_P_MIN)
+    col_bytes = lambda bk: bk * itemsize + rp * 4
     bk = K
-    if (K + rp) * _BLOCK_P_MIN * 4 > vmem_budget:
+    if col_bytes(K) * _BLOCK_P_MIN > vmem_budget:
         bk = 1
-        while (bk * 2 + rp) * _BLOCK_P_MIN * 4 <= vmem_budget and bk * 2 < K:
+        while col_bytes(bk * 2) * _BLOCK_P_MIN <= vmem_budget and bk * 2 < K:
             bk *= 2
-        if (bk + rp) * _BLOCK_P_MIN * 4 > vmem_budget:
+        if col_bytes(bk) * _BLOCK_P_MIN > vmem_budget:
             raise ValueError(
                 f"RSU axis n_rsu={n_rsu} cannot fit a {_BLOCK_P_MIN}-lane "
                 f"accumulator in {vmem_budget} B of VMEM"
             )
-    bp = pick_block_p(bk + rp, P, vmem_budget)
+    bp = _widest_block_p(col_bytes(bk), P, vmem_budget)
+    assert col_bytes(bk) * bp <= vmem_budget
     return bk, bp
 
 
@@ -151,7 +180,10 @@ def fedavg_reduce_auto(updates, weights, **kw):
     mode = _mode()
     if mode == "ref":
         return ref.fedavg_reduce(updates, weights)
-    kw.setdefault("block_p", pick_block_p(*updates.shape))
+    kw.setdefault(
+        "block_p", pick_block_p(*updates.shape,
+                                itemsize=updates.dtype.itemsize)
+    )
     return fedavg_reduce(updates, weights, interpret=mode == "interpret", **kw)
 
 
@@ -159,12 +191,16 @@ def rsu_reduce_auto(updates, weights, rid, n_rsu, **kw):
     """Segment-reduce by RSU attachment with backend dispatch.
 
     -> (partials (R, P), mass (R,)).  Tile policy: ``pick_rsu_blocks`` —
-    the (Rp, block_p) accumulator joins the update tile in the budget.
+    the (Rp, block_p) fp32 accumulator joins the (itemsize-priced) update
+    tile in the budget.  ``out_dtype`` (default fp32) downcasts the
+    partials on write — the bf16 chunk-partial carry lane.
     """
     mode = _mode()
     if mode == "ref":
-        return ref.rsu_reduce(updates, weights, rid, n_rsu)
-    bk, bp = pick_rsu_blocks(updates.shape[0], updates.shape[1], n_rsu)
+        return ref.rsu_reduce(updates, weights, rid, n_rsu,
+                              out_dtype=kw.get("out_dtype"))
+    bk, bp = pick_rsu_blocks(updates.shape[0], updates.shape[1], n_rsu,
+                             itemsize=updates.dtype.itemsize)
     kw.setdefault("block_k", bk)
     kw.setdefault("block_p", bp)
     return rsu_reduce(updates, weights, rid, n_rsu,
@@ -184,7 +220,10 @@ def server_update_auto(updates, weights, params, m, v, agg_idx, rnd, *,
         return ref.server_update(updates, weights, params, m, v, agg_idx,
                                  rnd, eta=eta, beta1=beta1, beta2=beta2,
                                  tau=tau)
-    kw.setdefault("block_p", pick_block_p(*updates.shape))
+    kw.setdefault(
+        "block_p", pick_block_p(*updates.shape,
+                                itemsize=updates.dtype.itemsize)
+    )
     return server_update(updates, weights, params, m, v, agg_idx, rnd,
                          eta=eta, beta1=beta1, beta2=beta2, tau=tau,
                          interpret=mode == "interpret", **kw)
@@ -208,7 +247,9 @@ def server_update_buffered_auto(updates, weights, buf, buf_w, params, m, v,
         )
     kw.setdefault(
         "block_p", pick_block_p(updates.shape[0] + buf.shape[0],
-                                updates.shape[1])
+                                updates.shape[1],
+                                itemsize=max(updates.dtype.itemsize,
+                                             buf.dtype.itemsize))
     )
     return server_update_buffered(
         updates, weights, buf, buf_w, params, m, v, agg_idx, rnd, drain,

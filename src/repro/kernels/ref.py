@@ -24,8 +24,8 @@ def fedavg_reduce(updates: jax.Array, weights: jax.Array) -> jax.Array:
     )
 
 
-def rsu_reduce(updates, weights, rid, n_rsu: int):
-    """(K, P) x (K,) x (K,) ids -> (partials (R, P), mass (R,)), fp32.
+def rsu_reduce(updates, weights, rid, n_rsu: int, out_dtype=None):
+    """(K, P) x (K,) x (K,) ids -> (partials (R, P), mass (R,) fp32).
 
     Segment-reduce by RSU attachment: ``partials[r] = sum_k w_k [rid_k ==
     r] u_k`` and ``mass[r] = sum_k w_k [rid_k == r]`` — the edge
@@ -33,6 +33,9 @@ def rsu_reduce(updates, weights, rid, n_rsu: int):
     the Pallas kernel's single-k-block geometry expression for expression
     (one-hot routing matrix, one ``dot_general`` over the cohort axis,
     one column sum), which is what makes the kernel contract bitwise.
+    The contraction accumulates fp32 whatever the update dtype (bf16 rows
+    upcast exactly); ``out_dtype`` (default fp32) only downcasts the
+    partials on the way out — the bf16 chunk-carry lane.
     """
     w = weights.astype(jnp.float32)
     onehot = rid[:, None] == jnp.arange(n_rsu, dtype=rid.dtype)[None, :]
@@ -43,12 +46,17 @@ def rsu_reduce(updates, weights, rid, n_rsu: int):
         preferred_element_type=jnp.float32,
     )
     mass = jnp.sum(m, axis=0)
+    if out_dtype is not None:
+        partials = partials.astype(out_dtype)
     return partials, mass
 
 
 def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
                   eta=1.0, beta1=0.9, beta2=0.99, tau=1e-3):
-    """Fused server update oracle -> (params', m', v'), all (P,) fp32.
+    """Fused server update oracle -> (params' in ``params.dtype``, m', v'
+    fp32).  All math accumulates fp32 (bf16 update rows upcast exactly);
+    the params output downcasts to the master dtype — a no-op for the
+    fp32 default lane.
 
     THE unfused composition: ``fedavg_reduce`` (the weighted cohort
     contraction above) followed by ``fl.aggregators.apply_rule`` — the
@@ -66,13 +74,14 @@ def server_update(updates, weights, params, m, v, agg_idx, rnd, *,
         agg_idx, (m.astype(jnp.float32), v.astype(jnp.float32)),
         params.astype(jnp.float32), delta, rnd, hp,
     )
-    return p2, m2, v2
+    return p2.astype(params.dtype), m2, v2
 
 
 def server_update_buffered(updates, weights, buf, buf_w, params, m, v,
                            agg_idx, rnd, drain, *,
                            eta=1.0, beta1=0.9, beta2=0.99, tau=1e-3):
-    """Fused buffered server update oracle -> (params', m', v'), (P,) fp32.
+    """Fused buffered server update oracle -> (params' in ``params.dtype``,
+    m', v' fp32).
 
     THE unfused composition of the async-rounds (``fedbuff``) server step:
     ONE ``fedavg_reduce`` contraction over the cohort rows with the
@@ -103,7 +112,7 @@ def server_update_buffered(updates, weights, buf, buf_w, params, m, v,
         agg_idx, (m.astype(jnp.float32), v.astype(jnp.float32)),
         params.astype(jnp.float32), delta, rnd, hp,
     )
-    return p2, m2, v2
+    return p2.astype(params.dtype), m2, v2
 
 
 def rttg_latency(pos, speed, accel, t, model_bytes, forced, cfg, predict,

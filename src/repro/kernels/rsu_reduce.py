@@ -78,13 +78,15 @@ def _seg_kernel(w_ref, rid_ref, u_ref, part_ref, mass_ref, acc_ref, macc_ref):
         macc_ref[...] += jnp.sum(m, axis=0, keepdims=True)
 
     # constant out-block indices along k: every visit writes the current
-    # accumulator; the last k-visit leaves the complete sum
-    part_ref[...] = acc_ref[...]
+    # accumulator (downcast to the partials' output dtype — identity for
+    # the fp32 default); the last k-visit leaves the complete sum
+    part_ref[...] = acc_ref[...].astype(part_ref.dtype)
     mass_ref[...] = macc_ref[...]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_rsu", "block_p", "block_k", "interpret")
+    jax.jit,
+    static_argnames=("n_rsu", "block_p", "block_k", "interpret", "out_dtype"),
 )
 def rsu_reduce(
     updates: jax.Array,  # (K, P) client update vectors
@@ -95,9 +97,16 @@ def rsu_reduce(
     block_p: int = 2048,
     block_k: int | None = None,
     interpret: bool = False,
+    out_dtype=None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Segment-reduce by attachment -> (partials (R, P) f32, mass (R,) f32)."""
+    """Segment-reduce by attachment -> (partials (R, P), mass (R,) f32).
+
+    The accumulator is ALWAYS fp32 VMEM scratch (bf16 update tiles upcast
+    in-tile); ``out_dtype`` (default fp32) only picks the partials' output
+    dtype — the bf16 lane's chunk carry rides half-width partials.
+    """
     K, P = updates.shape
+    out_dtype = jnp.float32 if out_dtype is None else out_dtype
     bk = K if block_k is None else min(block_k, K)
     pad_k = (-K) % bk
     pad_p = (-P) % block_p
@@ -121,7 +130,7 @@ def rsu_reduce(
             pl.BlockSpec((1, rp), lambda p, k: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((rp, Pp), jnp.float32),
+            jax.ShapeDtypeStruct((rp, Pp), out_dtype),
             jax.ShapeDtypeStruct((1, rp), jnp.float32),
         ],
         scratch_shapes=[_scratch((rp, block_p)), _scratch((1, rp))],

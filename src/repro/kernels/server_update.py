@@ -67,7 +67,9 @@ def _rule_math(agg, delta, p, m, v, eta, beta1, beta2, tau):
 def _update_kernel(eta, beta1, beta2, tau, s_ref, w_ref, u_ref, p_ref,
                    m_ref, v_ref, po_ref, mo_ref, vo_ref):
     # s: (1, 2) traced scalars [global agg index, round]; w: (1, K);
-    # u: (K, bp); p/m/v: (1, bp) -> outputs (1, bp)
+    # u: (K, bp) in ANY float dtype (bf16 update rows upcast in-tile, the
+    # dot accumulates fp32); p/m/v: (1, bp) fp32 -> the params output
+    # writes back in the MASTER dtype (po_ref's out_shape dtype), m/v fp32
     agg = s_ref[0, 0]
     delta = jnp.dot(
         w_ref[...], u_ref[...].astype(jnp.float32),
@@ -76,7 +78,7 @@ def _update_kernel(eta, beta1, beta2, tau, s_ref, w_ref, u_ref, p_ref,
     po, mo, vo = _rule_math(
         agg, delta, p_ref[...], m_ref[...], v_ref[...], eta, beta1, beta2, tau
     )
-    po_ref[...] = po
+    po_ref[...] = po.astype(po_ref.dtype)
     mo_ref[...] = mo
     vo_ref[...] = vo
 
@@ -101,7 +103,13 @@ def server_update(
     block_p: int = 2048,
     interpret: bool = False,
 ):
-    """Fused server update -> (params', m', v'), all (P,) fp32."""
+    """Fused server update -> (params' in ``params.dtype``, m', v' fp32).
+
+    Inputs upcast to fp32 rows in-tile (exact for bf16), the reduction and
+    moment rules accumulate in fp32, and the params output downcasts to
+    the master dtype on the final write — a no-op for the fp32 default
+    lane (bitwise-frozen).
+    """
     _assert_registry_order()
     K, P = updates.shape
     pp = (-P) % block_p
@@ -129,7 +137,11 @@ def server_update(
             pl.BlockSpec((1, block_p), lambda j: (0, j)),
             pl.BlockSpec((1, block_p), lambda j: (0, j)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((1, Pp), jnp.float32)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Pp), params.dtype),
+            jax.ShapeDtypeStruct((1, Pp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Pp), jnp.float32),
+        ],
         interpret=interpret,
     )(scalars, w2, up, row(params), row(m), row(v))
     return p2[0, :P], m2[0, :P], v2[0, :P]
@@ -191,8 +203,11 @@ def server_update_buffered(
         weights.astype(jnp.float32),
         jnp.where(drain, buf_w.astype(jnp.float32), 0.0),
     ])
-    ua = jnp.concatenate([updates.astype(jnp.float32),
-                          buf.astype(jnp.float32)], axis=0)
+    # concat in the operands' common dtype (promotion, NOT a forced fp32
+    # upcast): bf16 cohort rows + bf16 ring rows stay 2-byte through the
+    # tile walk and upcast in-tile; the fp32 lane is unchanged (fp32 rows
+    # promote to fp32, the historical layout)
+    ua = jnp.concatenate([updates, buf], axis=0)
     return server_update(
         ua, wa, params, m, v, agg_idx, rnd, eta=eta, beta1=beta1,
         beta2=beta2, tau=tau, block_p=block_p, interpret=interpret,

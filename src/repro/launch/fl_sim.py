@@ -11,7 +11,9 @@ steady densities (ring / highway / urban_grid), the time-varying
 ``hetero_fleet`` families (see docs/scenarios.md).  ``--aggregator``
 selects the server optimizer from the ``repro.fl.aggregators`` registry
 (fedavg / fedavgm / fedadam / fedyogi / staleness-discounted ``stale``).
-An unknown name for either fails fast with the registered catalog.
+``--dtype bfloat16`` turns on the mixed-precision lane (bf16 compute/comm
+against an fp32 master — docs/performance.md "Precision").  An unknown
+name for any of the three fails fast with the registered catalog.
 Whole (strategy x aggregator x seed x scenario) sweeps should use
 ``repro.fl.engine.ExperimentEngine`` directly: it batches the grid into
 one device-resident program and shards it over a mesh when given one.
@@ -49,6 +51,7 @@ def run_experiment(
     predict_horizon_s: float | None = None,
     scenario: str = "ring",
     aggregator: str = "fedavg",
+    dtype: str = "float32",
 ):
     if scenario not in SCENARIOS:
         raise ValueError(
@@ -59,6 +62,12 @@ def run_experiment(
         raise ValueError(
             f"unknown aggregator {aggregator!r}; registered catalog: "
             f"{', '.join(AGGREGATOR_ORDER)} (see repro/fl/aggregators.py)"
+        )
+    if dtype not in FLConfig.SUPPORTED_DTYPES:
+        raise ValueError(
+            f"unknown dtype {dtype!r}; supported dtypes: "
+            f"{', '.join(FLConfig.SUPPORTED_DTYPES)} "
+            f"(see docs/performance.md \"Precision\")"
         )
     model_cfg = get_config(PAPER_MODEL_BY_DATASET[dataset])
     # paper §IV-A: 3 local epochs on MNIST, 1 on CIFAR-10/SVHN
@@ -72,6 +81,7 @@ def run_experiment(
         num_clusters=10,
         aggregator=aggregator,
         seed=seed,
+        compute_dtype=dtype,
     )
     tr = scenario_config(scenario, num_vehicles=num_clients)
     if predict_horizon_s is not None:
@@ -88,6 +98,7 @@ def run_experiment(
         "classes_per_client": classes_per_client,
         "num_clients": num_clients,
         "seed": seed,
+        "dtype": dtype,
         "rounds": [dataclasses.asdict(r) for r in history],
         "time_to_acc_0.5": time_to_accuracy(history, 0.5),
     }
@@ -103,6 +114,7 @@ def main(argv=None):
     # names themselves (and stay correct for programmatic run_experiment calls)
     ap.add_argument("--scenario", default="ring")
     ap.add_argument("--aggregator", default="fedavg")
+    ap.add_argument("--dtype", default="float32")
     ap.add_argument("--classes-per-client", type=int, default=2)
     ap.add_argument("--num-clients", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
@@ -120,12 +132,18 @@ def main(argv=None):
             f"unknown aggregator {args.aggregator!r}; registered catalog: "
             f"{', '.join(AGGREGATOR_ORDER)}"
         )
+    if args.dtype not in FLConfig.SUPPORTED_DTYPES:
+        ap.error(
+            f"unknown dtype {args.dtype!r}; supported dtypes: "
+            f"{', '.join(FLConfig.SUPPORTED_DTYPES)}"
+        )
 
     result = run_experiment(
         args.dataset, args.strategy, args.rounds, args.connection_rate,
         args.classes_per_client, args.num_clients, args.seed,
         time_budget_s=args.time_budget, verbose=not args.quiet,
         scenario=args.scenario, aggregator=args.aggregator,
+        dtype=args.dtype,
     )
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

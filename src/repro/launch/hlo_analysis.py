@@ -168,11 +168,83 @@ def count_hlo_ops(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
 
 
+def carry_footprint(
+    dtype: str = "float32",
+    num_clients: int = 12,
+    buffer_size: int | None = None,
+    param_dtype: str | None = None,
+) -> dict:
+    """Donated round-carry bytes by ACTUAL leaf dtype, via ``jax.eval_shape``.
+
+    Traces ``rounds.init_state_traced`` for the reference small-MLP config
+    without allocating anything, then sums each ``RoundState`` leaf's
+    ``prod(shape) * dtype.itemsize``.  This is the byte account the
+    precision axis halves: in the bf16 lane the ``(Kb, P)`` fedbuff ring
+    (by far the largest leaf at fleet buffer sizes) carries
+    ``compute_dtype`` while the fp32 master ``params`` + moments stay
+    full-width — so the per-leaf dtype here is ground truth, not a
+    ``P * 4`` guess.  ``dtype`` sets ``FLConfig.compute_dtype``;
+    ``param_dtype`` (default: leave the fp32 master) sets the master leaf.
+    """
+    import jax
+
+    from repro.config import FLConfig, ModelConfig
+    from repro.core.scenarios import scenario_config
+    from repro.fl.rounds import experiment_key, init_state_traced
+    from repro.models import build_model
+    from repro.sharding import split_params
+
+    mlp = ModelConfig(name="mlp", family="mlp", num_layers=0, d_model=0,
+                      num_heads=0, num_kv_heads=0, d_ff=48, vocab_size=0,
+                      image_shape=(28, 28, 1), num_classes=10, channels=())
+    kw = dict(num_clients=num_clients, samples_per_client=32, batch_size=16,
+              num_clusters=4, local_epochs=1, compute_dtype=dtype)
+    if buffer_size is not None:
+        kw["buffer_size"] = buffer_size
+    if param_dtype is not None:
+        kw["param_dtype"] = param_dtype
+    fl = FLConfig(**kw)
+    api = build_model(mlp)
+    init = lambda k: split_params(api.init(k))[0]
+    tc = scenario_config("ring", num_vehicles=fl.num_clients)
+    state, _ = jax.eval_shape(
+        lambda k: init_state_traced(init, fl, tc, k),
+        experiment_key("mnist", "contextual", 0),
+    )
+
+    def leaf_bytes(x) -> int:
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        return n * x.dtype.itemsize
+
+    by_leaf: Dict[str, dict] = {}
+    total = 0
+    for name, leaf in state._asdict().items():
+        leaves = jax.tree_util.tree_leaves(leaf)
+        nbytes = sum(leaf_bytes(x) for x in leaves)
+        total += nbytes
+        by_leaf[name] = {
+            "bytes": nbytes,
+            "dtype": "mixed" if len(leaves) > 1 else str(leaves[0].dtype),
+            "shape": list(leaves[0].shape) if len(leaves) == 1 else None,
+        }
+    return {
+        "param_dtype": fl.param_dtype,
+        "compute_dtype": fl.compute_dtype,
+        "buffer_size": fl.buffer_size,
+        "P": int(state.params.shape[0]),
+        "total_bytes": total,
+        "bytes_by_leaf": by_leaf,
+    }
+
+
 def round_step_stats(
     num_clients: int = 12,
     rounds: int = 5,
     fused: bool = True,
     grid: int = 4,
+    dtype: str = "float32",
 ) -> dict:
     """FLOPs / HBM bytes of the compiled FL round program (per device).
 
@@ -183,7 +255,10 @@ def round_step_stats(
     named scope the engine tags its scan body with.  ``fused=False``
     rebuilds the round step on the legacy composition path so the fused
     kernel's arithmetic-intensity delta is measurable
-    (``benchmarks.roofline_report`` renders the comparison).
+    (``benchmarks.roofline_report`` renders the comparison).  ``dtype``
+    selects the precision lane (``FLConfig.compute_dtype``); the report
+    carries the matching ``carry_footprint`` account so the donated-carry
+    bytes are stated per actual leaf dtype.
     """
     import itertools
 
@@ -201,7 +276,8 @@ def round_step_stats(
                       num_heads=0, num_kv_heads=0, d_ff=48, vocab_size=0,
                       image_shape=(28, 28, 1), num_classes=10, channels=())
     fl = FLConfig(num_clients=num_clients, samples_per_client=32,
-                  batch_size=16, num_clusters=4, local_epochs=1)
+                  batch_size=16, num_clusters=4, local_epochs=1,
+                  compute_dtype=dtype)
     strategies = ("contextual", "gossip")
     scenarios = ("ring", "rush_hour")
     eng = ExperimentEngine(mlp, fl, "mnist", strategies=strategies)
@@ -242,6 +318,9 @@ def round_step_stats(
         "grid": len(runs),
         "rounds": rounds,
         "num_clients": num_clients,
+        "param_dtype": fl.param_dtype,
+        "compute_dtype": fl.compute_dtype,
+        "carry": carry_footprint(dtype, num_clients=num_clients),
         "dot_flops_per_device": stats.dot_flops,
         "hbm_bytes_per_device": stats.hbm_bytes,
         "arithmetic_intensity": ai,
@@ -265,6 +344,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--target", default="round-step", choices=["round-step"])
     ap.add_argument("--clients", type=int, default=12)
     ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--dtype", default="float32",
+                    help="precision lane (FLConfig.compute_dtype)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default artifacts/roundstep.json)")
     args = ap.parse_args(argv)
@@ -273,8 +354,10 @@ def main(argv=None) -> dict:
         os.path.dirname(__file__), "..", "..", "..", "artifacts", "roundstep.json"
     )
     doc = {
-        "fused": round_step_stats(args.clients, args.rounds, fused=True),
-        "unfused": round_step_stats(args.clients, args.rounds, fused=False),
+        "fused": round_step_stats(args.clients, args.rounds, fused=True,
+                                  dtype=args.dtype),
+        "unfused": round_step_stats(args.clients, args.rounds, fused=False,
+                                    dtype=args.dtype),
     }
     os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
     with open(out_path, "w") as f:
@@ -285,6 +368,12 @@ def main(argv=None) -> dict:
             f"hbm_bytes={r['hbm_bytes_per_device']:.3e},"
             f"ai={r['arithmetic_intensity']:.3f}"
         )
+    carry = doc["fused"]["carry"]
+    print(
+        f"round-step,carry,dtype={carry['compute_dtype']},"
+        f"total_bytes={carry['total_bytes']},"
+        f"buf_delta_bytes={carry['bytes_by_leaf']['buf_delta']['bytes']}"
+    )
     print(
         "round-step,ai_delta="
         f"{doc['fused']['arithmetic_intensity'] / max(doc['unfused']['arithmetic_intensity'], 1e-12):.3f}x,"

@@ -54,15 +54,23 @@ def init_cnn(key, cfg) -> dict:
 
 
 def cnn_logits(params, cfg, images):
-    """images (B,H,W,C) -> logits (B, num_classes)."""
-    x = images.astype(jnp.float32)
+    """images (B,H,W,C) -> logits (B, num_classes).
+
+    Activations follow the PARAM dtype (the fc2 leaf, representative of
+    the whole tree): fp32 masters run the historical fp32 forward; the FL
+    client's mixed-precision lane hands in bf16-cast params and the convs
+    / matmuls run half-width end to end (``fl.client.make_local_trainer``
+    holds loss and gradients in fp32).
+    """
+    x = images.astype(params["fc2"]["w"].dtype)
     for conv in params["convs"]:
         x = jax.lax.conv_general_dilated(
             x, conv["w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
         )
         x = jax.nn.relu(x + conv["b"][None, None, None, :])
         x = jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            x, jnp.asarray(-jnp.inf, x.dtype), jax.lax.max,
+            (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
         )
     x = x.reshape(x.shape[0], -1)
     x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
@@ -70,8 +78,12 @@ def cnn_logits(params, cfg, images):
 
 
 def cnn_loss(params, cfg, batch):
-    """batch: images (B,H,W,C), labels (B,)."""
-    logits = cnn_logits(params, cfg, batch["images"])
+    """batch: images (B,H,W,C), labels (B,).
+
+    The cross-entropy accumulates in fp32 whatever the forward dtype (the
+    logsumexp upcast is exact for bf16 logits and a no-op for fp32).
+    """
+    logits = cnn_logits(params, cfg, batch["images"]).astype(jnp.float32)
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
     loss = jnp.mean(logz - gold)

@@ -145,6 +145,46 @@ def test_fl_sim_cli_unknown_aggregator_exits_with_catalog(capsys):
     assert "fedyogi" in err and "stale" in err
 
 
+def test_fl_sim_unknown_dtype_lists_supported():
+    """Satellite: --dtype mirrors the catalog errors — an unknown dtype
+    name fails fast naming the supported set (CLI and programmatic entry
+    points), before any model/data work."""
+    from repro.config import FLConfig
+    from repro.launch import fl_sim
+
+    with pytest.raises(ValueError) as ei:
+        fl_sim.run_experiment("mnist", "contextual", rounds=1, dtype="fp16")
+    msg = str(ei.value)
+    assert "fp16" in msg
+    for name in FLConfig.SUPPORTED_DTYPES:
+        assert name in msg, f"supported dtype {name} missing from the error"
+
+
+def test_fl_sim_cli_unknown_dtype_exits_with_supported_set(capsys):
+    from repro.launch import fl_sim
+
+    with pytest.raises(SystemExit) as ei:
+        fl_sim.main(["--dtype", "fp16"])
+    assert ei.value.code == 2  # argparse usage error, not a stack trace
+    err = capsys.readouterr().err
+    assert "fp16" in err and "supported dtypes" in err
+    assert "float32" in err and "bfloat16" in err
+
+
+def test_flconfig_rejects_unknown_dtype_strings():
+    """FLConfig.__post_init__ names the supported set for either field."""
+    from repro.config import FLConfig
+
+    for field in ("param_dtype", "compute_dtype"):
+        with pytest.raises(ValueError) as ei:
+            FLConfig(**{field: "float16"})
+        msg = str(ei.value)
+        assert field in msg and "float16" in msg
+        assert "float32" in msg and "bfloat16" in msg
+    # the supported set is constructible
+    FLConfig(param_dtype="bfloat16", compute_dtype="bfloat16")
+
+
 def test_production_mesh_axes():
     from repro.launch.mesh import make_production_mesh
     # only shape math here (needs 256 devices to actually build)

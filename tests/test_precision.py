@@ -1,0 +1,310 @@
+"""Mixed-precision lane tests (``FLConfig.param_dtype`` / ``compute_dtype``).
+
+Five contracts around the precision axis:
+
+  * default-lane freeze: an EXPLICIT float32 config traces the same
+    program as the default config — per-round metrics and every
+    ``RoundState`` leaf equal bit for bit across the full aggregator
+    registry, under BOTH the ref and interpret kernel dispatch modes, and
+    the lowered fp32 round program contains no bf16 op at all;
+  * bf16 operands through the fused kernels: interpret-mode kernels ==
+    the pure-jnp oracles bit for bit with bf16 update rows (every path
+    accumulates fp32 and writes master-dtype outputs), across the
+    BlockSpec padding edges;
+  * tile policy: ``pick_block_p`` / ``pick_rsu_blocks`` honor the VMEM
+    budget invariant at BOTH itemsizes, including the exact budget edge
+    where fp32 rows reject and bf16 rows fit;
+  * carry footprint: the bf16 lane's donated ``RoundState`` carry
+    (``jax.eval_shape`` — nothing allocated) is <= 55% of the fp32
+    lane's at fleet buffer depth;
+  * end-to-end: the bf16 lane trains to within tolerance of fp32 final
+    accuracy on a small reference run.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FLConfig, ModelConfig
+from repro.core.scenarios import scenario_config, scenario_params
+from repro.kernels import ref
+from repro.kernels.ops import (
+    FEDAVG_VMEM_BUDGET,
+    pick_block_p,
+    pick_rsu_blocks,
+)
+from repro.kernels.rsu_reduce import rsu_reduce
+from repro.kernels.server_update import server_update, server_update_buffered
+
+pytestmark = pytest.mark.tier1
+
+N_CLIENTS = 8
+
+MLP = ModelConfig(name="mlp", family="mlp", num_layers=0, d_model=0,
+                  num_heads=0, num_kv_heads=0, d_ff=16, vocab_size=0,
+                  image_shape=(28, 28, 1), num_classes=10, channels=())
+
+FL = FLConfig(num_clients=N_CLIENTS, samples_per_client=32, local_epochs=1,
+              num_clusters=2, batch_size=16, sketch_dim=64)
+
+
+# ---------------------------------------------------------------------------
+# default-lane bitwise freeze (ref AND interpret dispatch)
+# ---------------------------------------------------------------------------
+def _final_states(fl, n_rounds=2):
+    """(final RoundState, stacked metrics) per registered aggregator after
+    ``n_rounds`` fused round steps on the ring scenario."""
+    from repro.fl.aggregators import AGGREGATOR_ORDER
+    from repro.fl.engine import ExperimentEngine
+    from repro.fl.rounds import (
+        experiment_key,
+        init_state_traced,
+        make_round_data,
+    )
+
+    eng = ExperimentEngine(MLP, fl, "mnist", strategies=("contextual",),
+                           aggregators=AGGREGATOR_ORDER)
+    eng._ensure_spec()
+    tc = scenario_config("ring", num_vehicles=N_CLIENTS)
+    key = experiment_key("mnist", "contextual", 0)
+    state, regions = init_state_traced(eng._init_params, fl, tc, key)
+    data = make_round_data(key, "mnist", fl, regions)
+    step = jax.jit(lambda s, ai: eng._round_step(
+        s, scenario_params(tc), jnp.zeros((), jnp.int32), ai, data, True
+    ))
+    out = {}
+    for agg, name in enumerate(AGGREGATOR_ORDER):
+        s, mets = state, []
+        for _ in range(n_rounds):
+            s, m = step(s, jnp.int32(agg))
+            mets.append(m)
+        out[name] = (s, mets)
+    return out, step
+
+
+def _assert_lanes_bitwise_equal(got, want):
+    assert got.keys() == want.keys()
+    for name in got:
+        sg, mg = got[name]
+        sw, mw = want[name]
+        for a, b in zip(jax.tree_util.tree_leaves(mg),
+                        jax.tree_util.tree_leaves(mw)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"{name}: metrics"
+            )
+        la, lb = (jax.tree_util.tree_flatten_with_path(x)[0] for x in (sg, sw))
+        for (path, a), (_, b) in zip(la, lb):
+            assert a.dtype == b.dtype, f"{name}: {path} dtype drifted"
+            if jnp.issubdtype(a.dtype, jax.dtypes.prng_key):
+                a, b = jax.random.key_data(a), jax.random.key_data(b)
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{name}: state leaf {jax.tree_util.keystr(path)}",
+            )
+
+
+def test_default_lane_bitwise_frozen_ref_dispatch():
+    """Explicit float32 config == default config, bit for bit, on every
+    aggregator's metrics and every RoundState leaf (ref dispatch — the
+    off-TPU production path)."""
+    fl32 = dataclasses.replace(FL, param_dtype="float32",
+                               compute_dtype="float32")
+    got, step = _final_states(fl32)
+    want, _ = _final_states(FL)
+    _assert_lanes_bitwise_equal(got, want)
+    # and the traced fp32 program must contain no half-precision op at all:
+    # a leaked cast would shift rounding even where outputs happen to agree
+    from repro.fl.aggregators import AGGREGATOR_ORDER  # noqa: F401
+    state0 = want[sorted(want)[0]][0]
+    hlo = step.lower(state0, jnp.int32(0)).as_text()
+    assert "bf16" not in hlo, "fp32 default lane traced a bf16 op"
+
+
+def test_default_lane_bitwise_frozen_interpret_dispatch(monkeypatch):
+    """Same freeze under interpret dispatch: the Pallas kernel path (the
+    TPU-target geometry) must also be cast-free for the fp32 config."""
+    monkeypatch.setenv("REPRO_KERNELS_INTERPRET", "1")
+    fl32 = dataclasses.replace(FL, param_dtype="float32",
+                               compute_dtype="float32")
+    got, _ = _final_states(fl32, n_rounds=1)
+    want, _ = _final_states(FL, n_rounds=1)
+    _assert_lanes_bitwise_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# bf16 rows through the fused kernels: interpret == ref, bit for bit
+# ---------------------------------------------------------------------------
+def _operands(k, p, seed=0):
+    ks = jax.random.split(jax.random.key(seed * 7919 + k * 31 + p), 5)
+    u = jax.random.normal(ks[0], (k, p), jnp.float32)
+    w = jax.random.uniform(ks[1], (k,))
+    w = w / w.sum()
+    params = jax.random.normal(ks[2], (p,), jnp.float32)
+    m = 0.1 * jax.random.normal(ks[3], (p,), jnp.float32)
+    v = jnp.abs(0.01 * jax.random.normal(ks[4], (p,), jnp.float32))
+    return u, w, params, m, v
+
+
+# padding edges: P one off either side of the tile and an exact multiple
+_BF16_SHAPES = [(5, 2047, 2048), (3, 2049, 2048), (7, 512, 256)]
+
+
+@pytest.mark.parametrize("agg", [0, 2, 5])  # fedavg, an adaptive rule, fedbuff
+@pytest.mark.parametrize("k,p,bp", _BF16_SHAPES)
+def test_server_update_kernel_bf16_rows_bitwise_vs_ref(agg, k, p, bp):
+    u, w, params, m, v = _operands(k, p)
+    ub = u.astype(jnp.bfloat16)
+    ai, rnd = jnp.int32(agg), jnp.int32(3)
+    got = server_update(ub, w, params, m, v, ai, rnd, block_p=bp,
+                        interpret=True)
+    want = jax.jit(lambda *a: ref.server_update(*a))(ub, w, params, m, v,
+                                                     ai, rnd)
+    for name, a, b in zip(("params", "m", "v"), got, want):
+        # fp32 master + fp32 moments out, whatever the row dtype
+        assert a.dtype == jnp.float32, f"{name} dtype {a.dtype}"
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_server_update_buffered_kernel_bf16_ring_bitwise_vs_ref():
+    k, kb, p = 4, 3, 2049
+    u, w, params, m, v = _operands(k, p)
+    ub = u.astype(jnp.bfloat16)
+    buf = (0.5 * jax.random.normal(jax.random.key(9), (kb, p))).astype(
+        jnp.bfloat16
+    )
+    buf_w = jax.random.uniform(jax.random.key(10), (kb,))
+    for drain in (False, True):
+        got = server_update_buffered(
+            ub, w, buf, buf_w, params, m, v, jnp.int32(5), jnp.int32(2),
+            jnp.asarray(drain), block_p=2048, interpret=True,
+        )
+        want = jax.jit(lambda *a: ref.server_update_buffered(*a))(
+            ub, w, buf, buf_w, params, m, v, jnp.int32(5), jnp.int32(2),
+            jnp.asarray(drain),
+        )
+        for name, a, b in zip(("params", "m", "v"), got, want):
+            assert a.dtype == jnp.float32
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"drain={drain}/{name}")
+
+
+def test_rsu_reduce_kernel_bf16_rows_bitwise_vs_ref():
+    k, p, r = 9, 515, 4
+    u, _, _, _, _ = _operands(k, p)
+    ub = u.astype(jnp.bfloat16)
+    w = jax.random.uniform(jax.random.key(3), (k,))
+    rid = jax.random.randint(jax.random.key(4), (k,), 0, r)
+    for out_dtype in (None, jnp.bfloat16):
+        pk, mk = rsu_reduce(ub, w, rid, r, block_p=256, interpret=True,
+                            out_dtype=out_dtype)
+        pr, mr = jax.jit(ref.rsu_reduce, static_argnums=(3, 4))(
+            ub, w, rid, r, out_dtype
+        )
+        expect = jnp.float32 if out_dtype is None else out_dtype
+        assert pk.dtype == expect and pr.dtype == expect
+        assert mk.dtype == jnp.float32  # mass is never downcast
+        np.testing.assert_array_equal(np.asarray(pk, np.float32),
+                                      np.asarray(pr, np.float32))
+        np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+
+
+def test_server_update_bf16_master_params_roundtrip():
+    """A bf16 MASTER params vector comes back bf16 (m/v stay fp32)."""
+    u, w, params, m, v = _operands(4, 513)
+    pb = params.astype(jnp.bfloat16)
+    got = server_update(u.astype(jnp.bfloat16), w, pb, m, v, jnp.int32(0),
+                        jnp.int32(0), block_p=256, interpret=True)
+    want = jax.jit(lambda *a: ref.server_update(*a))(
+        u.astype(jnp.bfloat16), w, pb, m, v, jnp.int32(0), jnp.int32(0)
+    )
+    assert got[0].dtype == jnp.bfloat16 and want[0].dtype == jnp.bfloat16
+    assert got[1].dtype == jnp.float32 and got[2].dtype == jnp.float32
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# tile policy: the VMEM invariant at both itemsizes
+# ---------------------------------------------------------------------------
+def test_pick_block_p_itemsize_budget_edge():
+    B = FEDAVG_VMEM_BUDGET
+    # K=4096 fp32 rows fit the minimum tile EXACTLY (4096*128*4 == budget);
+    # half-width rows at the same K earn double the tile, still exact
+    assert pick_block_p(4096, 10**6, itemsize=4) == 128
+    assert pick_block_p(4096, 10**6, itemsize=2) == 256
+    # K=8192 is the rejection edge: fp32 rows cannot fit a single-lane
+    # tile, bf16 rows fit it exactly (8192*128*2 == budget)
+    with pytest.raises(ValueError, match="cannot fit"):
+        pick_block_p(8192, 10**6, itemsize=4)
+    assert pick_block_p(8192, 10**6, itemsize=2) == 128
+    # the invariant holds across a sweep of both itemsizes
+    for its in (2, 4):
+        for k in (1, 5, 100, 1000, 4096):
+            bp = pick_block_p(k, 10**6, itemsize=its)
+            assert k * bp * its <= B, (k, its, bp)
+    # half-width rows double the tile until the cap
+    assert pick_block_p(512, 10**7, itemsize=2) == \
+        2 * pick_block_p(512, 10**7, itemsize=4)
+    with pytest.raises(ValueError, match="itemsize"):
+        pick_block_p(4, 100, itemsize=3)
+
+
+def test_pick_rsu_blocks_itemsize_budget_edge():
+    B = FEDAVG_VMEM_BUDGET
+    # n_rsu=10 pads the accumulator to 128 fp32 rows; K=4000 fp32 rows
+    # overflow the single-k-block column budget and must split, while the
+    # same cohort in bf16 keeps the single (bitwise-vs-ref) k-block
+    bk4, bp4 = pick_rsu_blocks(4000, 10**5, 10, itemsize=4)
+    bk2, bp2 = pick_rsu_blocks(4000, 10**5, 10, itemsize=2)
+    assert bk4 < 4000 and bk2 == 4000
+    for (bk, bp), its in ((bk4, bp4), 4), ((bk2, bp2), 2):
+        rp = 128
+        assert (bk * its + rp * 4) * bp <= B, (bk, bp, its)
+    with pytest.raises(ValueError, match="itemsize"):
+        pick_rsu_blocks(4, 100, 2, itemsize=5)
+
+
+# ---------------------------------------------------------------------------
+# carry footprint: bf16 lane <= 55% of fp32 at fleet buffer depth
+# ---------------------------------------------------------------------------
+def test_bf16_lane_carry_footprint_halves():
+    """``jax.eval_shape`` over the real init trace — nothing allocated; the
+    ISSUE's headline claim, measured on actual leaf dtypes."""
+    from repro.launch.hlo_analysis import carry_footprint
+
+    f32 = carry_footprint("float32", buffer_size=48)
+    b16 = carry_footprint("bfloat16", buffer_size=48)
+    # the ring halves exactly; master + moments stay full-width
+    assert (2 * b16["bytes_by_leaf"]["buf_delta"]["bytes"]
+            == f32["bytes_by_leaf"]["buf_delta"]["bytes"])
+    for leaf in ("params", "opt_m", "opt_v"):
+        assert b16["bytes_by_leaf"][leaf] == f32["bytes_by_leaf"][leaf], leaf
+    assert b16["bytes_by_leaf"]["buf_delta"]["dtype"] == "bfloat16"
+    assert b16["total_bytes"] <= 0.55 * f32["total_bytes"], (
+        b16["total_bytes"] / f32["total_bytes"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the bf16 lane trains within tolerance of fp32
+# ---------------------------------------------------------------------------
+def test_bf16_lane_final_accuracy_within_tolerance():
+    from repro.fl.engine import ExperimentEngine
+
+    def final_acc(fl):
+        eng = ExperimentEngine(MLP, fl, "mnist", strategies=("contextual",),
+                               aggregators=("fedavg",))
+        res = eng.run_grid(seeds=(0,), scenarios=("ring",), rounds=4,
+                           eval_every=4)
+        return list(res.final_accuracy().values())[0]
+
+    a32 = final_acc(FL)
+    a16 = final_acc(dataclasses.replace(FL, compute_dtype="bfloat16"))
+    assert np.isfinite(a16)
+    # bf16 forward + fp32 grad accumulation tracks fp32 training closely
+    # at this scale; 0.1 absolute is ~3x the observed gap
+    assert abs(a32 - a16) <= 0.1, (a32, a16)

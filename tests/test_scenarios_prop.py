@@ -107,11 +107,14 @@ _ROUND_ENV: dict = {}
 def round_env(mode="flat"):
     """One compiled round_step + fixed init per aggregation MODE, reused
     across all draws (the scenario is a traced argument, so no draw ever
-    retraces).  ``mode``: "flat" (the historical env) or "hierarchical"
+    retraces).  ``mode``: "flat" (the historical env), "hierarchical"
     (two-tier RSU aggregation WITH chunk-streamed cohorts — the fleet
-    scaling path, exercised here at toy size).  A memoized helper rather
-    than a pytest fixture: the hypothesis fallback shim wraps tests with an
-    empty signature, which hides fixture requests."""
+    scaling path, exercised here at toy size), or their mixed-precision
+    twins "bf16" / "bf16_hierarchical" (``FLConfig.compute_dtype =
+    bfloat16``: bf16 client deltas, fedbuff ring and chunk partials over
+    the fp32 master).  A memoized helper rather than a pytest fixture: the
+    hypothesis fallback shim wraps tests with an empty signature, which
+    hides fixture requests."""
     if mode not in _ROUND_ENV:
         from repro.fl.aggregators import AGGREGATOR_ORDER
         from repro.fl.engine import ExperimentEngine
@@ -121,9 +124,11 @@ def round_env(mode="flat"):
             make_round_data,
         )
 
-        fl = FL if mode == "flat" else dataclasses.replace(
+        fl = FL if "hierarchical" not in mode else dataclasses.replace(
             FL, hierarchical=True, client_block=3
         )
+        if mode.startswith("bf16"):
+            fl = dataclasses.replace(fl, compute_dtype="bfloat16")
         # the engine compiles the FULL aggregator registry so every draw
         # can sweep every registered server optimizer (the aggregator is a
         # traced switch index — no retrace per rule)
@@ -181,8 +186,17 @@ def _sweep_finite(mode, mean_speed, speed_std, accel_std, ou_theta,
                 assert bool(jnp.all(jnp.isfinite(leaf))), (
                     f"{tag}: non-finite twin.{name}"
                 )
+            if mode.startswith("bf16"):
+                # the comm-lane leaf must actually carry the half dtype
+                # (a silently-fp32 ring would vacuously pass finiteness)
+                assert new_state.buf_delta.dtype == jnp.bfloat16, (
+                    f"{tag}: buf_delta dtype {new_state.buf_delta.dtype}"
+                )
+                assert bool(jnp.all(jnp.isfinite(
+                    new_state.buf_delta.astype(jnp.float32)
+                ))), f"{tag}: non-finite buf_delta"
             assert int(metrics.n_succeeded) <= int(metrics.n_selected)
-            if mode == "hierarchical":
+            if "hierarchical" in mode:
                 # a dark RSU (rsu_outage draws reach 80% corridor outage)
                 # must DROP its partial, never poison the sketches/model
                 assert bool(jnp.all(jnp.isfinite(new_state.sketches))), (
@@ -217,3 +231,21 @@ def test_round_step_finite_hierarchical_for_every_scenario(**kw):
     # chunk-streamed cohorts (client_block=3 over the K-slot cohort), swept
     # across the full scenario catalog and aggregator registry
     _sweep_finite("hierarchical", **kw)
+
+
+@settings(max_examples=1, deadline=None)
+@given(**_FINITE_DRAWS)
+def test_round_step_finite_bf16_for_every_scenario(**kw):
+    # the mixed-precision lane: bf16 client deltas / comm payload / fedbuff
+    # ring over the fp32 master, swept across the full scenario catalog and
+    # aggregator registry (fedbuff's bf16 ring included)
+    _sweep_finite("bf16", **kw)
+
+
+@settings(max_examples=1, deadline=None)
+@given(**_FINITE_DRAWS)
+def test_round_step_finite_bf16_hierarchical_for_every_scenario(**kw):
+    # bf16 + two-tier RSU aggregation: the (R, P) chunk partials ride the
+    # inner scan carry in bf16 (rsu_reduce downcasts on the way out of its
+    # fp32 accumulator) — the fleet path's half-width carry
+    _sweep_finite("bf16_hierarchical", **kw)
